@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS = []
+
+
+def timeit(fn, *args, repeats=5, inner=3, warmup=2):
+    """Best-of-repeats wall time (seconds) for fn(*args), jax-aware."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(
+            r, jax.Array) else None
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            r = fn(*args)
+        if isinstance(r, jax.Array):
+            jax.block_until_ready(r)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def ns_per_byte(seconds: float, n_bytes: int) -> float:
+    return seconds * 1e9 / n_bytes

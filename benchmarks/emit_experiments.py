@@ -1,0 +1,47 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from results/dryrun."""
+from __future__ import annotations
+
+import json
+
+from .roofline import load_results, roofline_row
+
+
+def markdown_tables(results_dir="results/dryrun"):
+    results = load_results(results_dir)
+    rows = [roofline_row(r) for r in results.values()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    dry = ["| arch | shape | mesh | status | lower+compile (s) | args/dev GiB | temp/dev GiB (CPU-measured) | collectives (corrected, GiB/dev) |",
+           "|---|---|---|---|---|---|---|---|"]
+    roof = ["| arch | shape | mesh | compute s | memory s | collective s | dominant | MODEL/HLO flops | roofline fraction |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key, r in sorted(results.items()):
+        arch, shape, mesh = key
+        if r["status"] != "ok":
+            dry.append(f"| {arch} | {shape} | {mesh} | {r['status']} "
+                       f"({r.get('reason', r.get('error',''))[:40]}) | | | | |")
+            continue
+        coll = r["corrected"]["collective_bytes_per_device"] / 2**30
+        dry.append(
+            f"| {arch} | {shape} | {mesh} | ok | "
+            f"{r['lower_s'] + r['compile_s']:.0f} | "
+            f"{r['memory']['argument_bytes']/2**30:.2f} | "
+            f"{r['memory']['temp_bytes']/2**30:.2f} | {coll:.1f} |")
+    for rr in rows:
+        if rr["status"] != "ok":
+            roof.append(f"| {rr['arch']} | {rr['shape']} | {rr['mesh']} | "
+                        f"{rr['status']} | | | | | |")
+            continue
+        roof.append(
+            f"| {rr['arch']} | {rr['shape']} | {rr['mesh']} | "
+            f"{rr['t_compute_s']:.3f} | {rr['t_memory_s']:.4f} | "
+            f"{rr['t_collective_s']:.3f} | {rr['dominant']} | "
+            f"{rr['useful_ratio']:.2f} | {rr['roofline_fraction(MFU-bound)']:.2f} |")
+    return "\n".join(dry), "\n".join(roof), rows
+
+
+if __name__ == "__main__":
+    d, r, _ = markdown_tables()
+    print(d)
+    print()
+    print(r)

@@ -1,0 +1,39 @@
+"""Paper §5.4 analog: GF(2^32) carry-less Multilinear vs integer families.
+
+TPU has no CLMUL (DESIGN.md §2): a carry-less 32x32 product costs 32
+mask-xor partial products on the VPU vs 5 native multiplies for the
+integer path -- so the paper's conclusion ('hardware-supported carry-less
+multiplications are not fast enough') holds a fortiori. We measure the
+jnp shift-xor implementation and report the op-count model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf, keys as keymod, multilinear as ml
+from .common import ns_per_byte, row, timeit
+
+B, N = 64, 256  # smaller: clmul-by-loop is 32x the work
+N_BYTES = B * N * 4
+
+
+def run():
+    kb = keymod.KeyBuffer(seed=5)
+    hi, lo = map(jnp.asarray, kb.hi_lo(N + 1))
+    k32 = jnp.asarray(kb.hi_lo(N + 1)[1])
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(4)))
+    toks = jnp.asarray(rng.integers(0, 2**32, size=(B, N), dtype=np.uint64).astype(np.uint32))
+
+    t_int = timeit(jax.jit(lambda t: ml.multilinear(t, hi, lo)), toks)
+    t_gf = timeit(jax.jit(lambda t: gf.gf_multilinear(t, k32)), toks)
+    t_gfhm = timeit(jax.jit(lambda t: gf.gf_multilinear_hm(t, k32)), toks)
+    row("gf/multilinear-int", t_int * 1e6, f"{ns_per_byte(t_int, N_BYTES):.3f} ns/B")
+    row("gf/gf-multilinear", t_gf * 1e6,
+        f"{ns_per_byte(t_gf, N_BYTES):.3f} ns/B; x{t_gf / t_int:.1f} slower (paper: 4-9x w/ CLMUL)")
+    row("gf/gf-multilinear-hm", t_gfhm * 1e6,
+        f"{ns_per_byte(t_gfhm, N_BYTES):.3f} ns/B; x{t_gfhm / t_int:.1f} slower")
+    row("gf/tpu-model", 0.0,
+        "no CLMUL on TPU: 32 mask-xor steps/char vs 5 muls/char integer; "
+        "Barrett adds 2 clmuls once per string")

@@ -1,0 +1,15 @@
+"""Inject the generated dry-run/roofline tables into EXPERIMENTS.md."""
+import re
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks.emit_experiments import markdown_tables
+
+dry, roof, _ = markdown_tables("results/dryrun")
+text = open("EXPERIMENTS.md").read()
+text = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## )", "<!-- DRYRUN_TABLE -->\n" + dry + "\n\n", text, count=1, flags=re.S) \
+    if "<!-- DRYRUN_TABLE -->\n|" in text else text.replace("<!-- DRYRUN_TABLE -->", "<!-- DRYRUN_TABLE -->\n" + dry)
+text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n### Reading)", "<!-- ROOFLINE_TABLE -->\n" + roof + "\n", text, count=1, flags=re.S) \
+    if "<!-- ROOFLINE_TABLE -->\n|" in text else text.replace("<!-- ROOFLINE_TABLE -->", "<!-- ROOFLINE_TABLE -->\n" + roof)
+open("EXPERIMENTS.md", "w").write(text)
+print("tables injected:", len(dry.splitlines()), "+", len(roof.splitlines()), "rows")

@@ -1,0 +1,195 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/<arch>__<shape>__<mesh>.json and derives the three
+roofline terms per (arch x shape x mesh):
+
+  compute term    = FLOPs_dev / peak_FLOPs        (197 TFLOP/s bf16, v5e)
+  memory term     = bytes_dev / HBM_bw            (819 GB/s)
+  collective term = collective_bytes_dev / link_bw (~50 GB/s ICI)
+
+FLOPs_dev comes from the trip-count-corrected HLO dot census
+(launch/hlo_analysis.py); bytes_dev is modeled analytically (weights read
++ activation checkpoint traffic + cache reads) because XLA:CPU buffer
+stats include f32-emulation copies that do not exist on TPU; collective
+bytes are HLO-parsed (corrected) with a /2 adjustment for the f32-master
+gathers XLA:CPU emits where TPU gathers bf16.
+
+Also reports MODEL_FLOPS = 6*N*D (train; 2*N_active per decoded token) and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = {"single": 256, "multi": 512}
+
+from repro.configs import SHAPES, get_config
+
+
+def model_flops_per_device(cfg, shape, n_devices: int) -> float:
+    """Analytic useful FLOPs per device per step (forward+backward for
+    train; one token per sequence for decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6  # fwd 2 + bwd 4
+        attn = _attn_flops(cfg, shape.seq_len, causal_half=True) * shape.global_batch * 3
+        return (mult * n_active * tokens + attn) / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        attn = _attn_flops(cfg, shape.seq_len, causal_half=True) * shape.global_batch
+        return (2 * n_active * tokens + attn) / n_devices
+    # decode: one token, attention reads the whole cache
+    tokens = shape.global_batch
+    attn = 0.0
+    for i in range(cfg.n_layers):
+        if cfg._layer_is_attention(i):
+            win = _layer_window(cfg, i)
+            s_eff = min(shape.seq_len, win)
+            attn += 4 * cfg.n_heads * cfg.head_dim * s_eff
+    return (2 * n_active * tokens + attn * shape.global_batch) / n_devices
+
+
+def _layer_window(cfg, i):
+    if cfg.attention == "sliding_global" and not cfg._layer_is_global_attn(i):
+        return cfg.sliding_window
+    return 1 << 62
+
+
+def _attn_flops(cfg, T, causal_half=False):
+    """Score+PV flops per sequence (fwd), all layers."""
+    total = 0.0
+    for i in range(cfg.n_layers):
+        if not cfg._layer_is_attention(i):
+            continue
+        win = min(_layer_window(cfg, i), T)
+        if win >= T:
+            pairs = T * T / (2 if causal_half else 1)
+        else:
+            pairs = T * win
+        total += 4 * cfg.n_heads * cfg.head_dim * pairs
+    if cfg.encdec:
+        total += cfg.n_encoder_layers * 4 * cfg.n_heads * cfg.head_dim \
+            * cfg.encoder_positions ** 2
+        total += cfg.n_layers * 4 * cfg.n_heads * cfg.head_dim * T * cfg.encoder_positions
+    return total
+
+
+def hbm_bytes_per_device(cfg, shape, n_devices: int) -> float:
+    """Analytic HBM traffic per device per step (TPU model, bf16 compute).
+
+    train: weights fwd+bwd-recompute+grad write (bf16 x3) + optimizer f32
+    read+write (m, v or factored) + activation checkpoints r+w.
+    decode: full active weights (bf16) + cache read per token.
+    """
+    P = cfg.param_count()
+    P_active = cfg.active_param_count()
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        w = P * 2 * 3            # bf16 read fwd + read in bwd + grads write
+        opt = P * 4 * 4          # f32 master r/w + second moment r/w
+        acts = _act_checkpoint_bytes(cfg, B, T) * 2
+        return (w + opt + acts) / n_devices
+    if shape.kind == "prefill":
+        w = P * 2
+        acts = _act_checkpoint_bytes(cfg, B, T)
+        kv = _cache_bytes(cfg, B, T)
+        return (w + acts + kv) / n_devices
+    w = P_active * 2 * B         # every sequence reads the active weights...
+    w = min(w, P * 2)            # ...but reads batch-share the full weights
+    kv = _cache_bytes(cfg, B, T)
+    return (w + kv) / n_devices
+
+
+def _act_checkpoint_bytes(cfg, B, T):
+    n_saves = cfg.n_layers if not cfg.attn_every else cfg.n_layers // cfg.attn_every
+    return n_saves * B * T * cfg.d_model * 2
+
+
+def _cache_bytes(cfg, B, T):
+    total = 0
+    for i in range(cfg.n_layers):
+        if cfg._layer_is_attention(i):
+            s_eff = min(T, _layer_window(cfg, i))
+            total += 2 * B * s_eff * cfg.n_kv_heads * cfg.head_dim * 2
+        elif cfg.ssm_type == "mamba":
+            total += B * cfg.ssm_expand * cfg.d_model * cfg.d_state * 4
+        elif cfg.ssm_type == "rwkv6":
+            total += B * cfg.d_model * (cfg.d_model // cfg.n_heads) * 4
+    return total
+
+
+def load_results(results_dir="results/dryrun"):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def roofline_row(r):
+    arch, shape_name, mesh = r["arch"], r["shape"], r["mesh"]
+    if r.get("status") != "ok":
+        return {"arch": arch, "shape": shape_name, "mesh": mesh,
+                "status": r.get("status", "?"), "reason": r.get("reason", r.get("error", ""))[:90]}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_dev = CHIPS[mesh]
+    hlo_flops = r["corrected"]["dot_flops_per_device"]
+    # TPU adjustment: XLA:CPU gathers f32 masters (TPU gathers bf16 casts)
+    coll_dev = r["corrected"]["collective_bytes_per_device"] / 2
+    mdl_flops = model_flops_per_device(cfg, shape, n_dev)
+    mem_bytes = hbm_bytes_per_device(cfg, shape, n_dev)
+    t_comp = hlo_flops / PEAK_FLOPS
+    t_mem = mem_bytes / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+    useful = mdl_flops / hlo_flops if hlo_flops else 0.0
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction = intrinsic-roof time / bound. For train/prefill the
+    # intrinsic roof is useful compute (MFU); for decode it is the HBM read
+    # of resident weights + cache (decode is memory-bound by construction).
+    if shape.kind == "decode":
+        ideal = t_mem
+    else:
+        ideal = mdl_flops / PEAK_FLOPS
+    mfu = ideal / bound if bound else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh, "status": "ok",
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom[1],
+        "hlo_flops_dev": hlo_flops, "model_flops_dev": mdl_flops,
+        "useful_ratio": useful, "roofline_fraction(MFU-bound)": mfu,
+        "temp_bytes_dev": r["memory"]["temp_bytes"],
+        "arg_bytes_dev": r["memory"]["argument_bytes"],
+    }
+
+
+def run():
+    results = load_results()
+    from .common import row
+
+    rows = []
+    for key in sorted(results):
+        rr = roofline_row(results[key])
+        rows.append(rr)
+        if rr["status"] != "ok":
+            row(f"roofline/{key[0]}/{key[1]}/{key[2]}", 0.0, rr["status"])
+            continue
+        row(
+            f"roofline/{key[0]}/{key[1]}/{key[2]}", 0.0,
+            f"comp={rr['t_compute_s']:.3f}s mem={rr['t_memory_s']:.3f}s "
+            f"coll={rr['t_collective_s']:.3f}s dom={rr['dominant']} "
+            f"useful={rr['useful_ratio']:.2f} frac={rr['roofline_fraction(MFU-bound)']:.2f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator -- one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see common.row).
+  table2  -- Multilinear vs 2-by-2 vs HM (paper Table 2)
+  table3  -- vs Rabin-Karp / SAX (paper Table 3)
+  table4  -- vs NH (paper Table 4)
+  gf      -- GF(2^32) carry-less variants (paper §5.4)
+  wordsize-- word-size/Stinson trade-off (paper §3.2/§5.5, Figs 1-3)
+  kernels -- Pallas kernel VMEM/roofline model + interpret sanity
+  roofline-- dry-run roofline terms (if results/dryrun exists)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import gf_variants, table2_multilinear, table3_common, table4_nh, wordsize
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (table2_multilinear, table3_common, table4_nh, gf_variants, wordsize):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    try:
+        from . import kernels_bench
+
+        kernels_bench.run()
+    except Exception:  # noqa: BLE001
+        failures += 1
+        traceback.print_exc()
+    try:
+        import os
+
+        if os.path.isdir("results/dryrun"):
+            from . import roofline
+
+            roofline.run()
+    except Exception:  # noqa: BLE001
+        failures += 1
+        traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

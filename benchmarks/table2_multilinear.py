@@ -1,0 +1,55 @@
+"""Paper Table 2 analog: MULTILINEAR vs 2-by-2 vs MULTILINEAR-HM.
+
+The paper reports CPU cycles/byte across x86/ARM processors; the portable
+reproduction axis here is (a) relative ordering on this host's vector
+units via jit'd batched hashing, (b) the structural TPU cost model:
+native 32-bit multiplies per character from the limb formulation
+(MULTILINEAR 5/char vs HM 3/char -- the paper's halving, modulo limbs),
+and (c) the memory-roofline bound that makes them equal on TPU
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hostref, keys as keymod, multilinear as ml
+from .common import ns_per_byte, row, timeit
+
+B, N = 256, 1024
+N_BYTES = B * N * 4
+
+
+def run():
+    kb = keymod.KeyBuffer(seed=2)
+    ku = kb.u64(N + 1)
+    hi, lo = keymod.split_hi_lo(ku)
+    hi_j, lo_j = jnp.asarray(hi), jnp.asarray(lo)
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(1)))
+    toks = rng.integers(0, 2**32, size=(B, N), dtype=np.uint64).astype(np.uint32)
+    toks_j = jnp.asarray(toks)
+
+    fns = {
+        "multilinear": jax.jit(lambda t: ml.multilinear(t, hi_j, lo_j)),
+        "multilinear_2x2": jax.jit(lambda t: ml.multilinear_2x2(t, hi_j, lo_j)),
+        "multilinear_hm": jax.jit(lambda t: ml.multilinear_hm(t, hi_j, lo_j)),
+    }
+    base = None
+    for name, fn in fns.items():
+        t = timeit(fn, toks_j)
+        base = base or t
+        row(f"table2/{name}/jit-limb", t * 1e6,
+            f"{ns_per_byte(t, N_BYTES):.3f} ns/B; x{t / base:.2f} vs multilinear")
+    # host numpy-u64 path (the paper's native-64-bit situation)
+    t_np = timeit(lambda: hostref.multilinear_np(toks, ku))
+    row("table2/multilinear/numpy-u64", t_np * 1e6,
+        f"{ns_per_byte(t_np, N_BYTES):.3f} ns/B (native u64 analog)")
+    t_np2 = timeit(lambda: hostref.multilinear_hm_np(toks, ku))
+    row("table2/multilinear_hm/numpy-u64", t_np2 * 1e6,
+        f"{ns_per_byte(t_np2, N_BYTES):.3f} ns/B; x{t_np2 / t_np:.2f} vs multilinear")
+    # structural TPU model (limb multiply counts per 32-bit char)
+    row("table2/tpu-model/multilinear", 0.0,
+        "5 native muls/char (mul64_u32); HBM-bound at 12 key+4 data B/char")
+    row("table2/tpu-model/multilinear_hm", 0.0,
+        "3 native muls/char (mul64_low/2 chars=6); same 16 B/char -> same roofline")

@@ -1,0 +1,39 @@
+"""Paper Table 3 analog: best Multilinear vs Rabin-Karp vs SAX (+FNV).
+
+The paper found RK/SAX 2-5x slower than Multilinear on scalar desktops
+with native 64-bit multipliers. On this host the ORDER INVERTS: RK/SAX do
+1 native op/char while mod-2^64 limb emulation does ~12, and the batch
+axis vectorizes both. This is reported as a transfer failure in
+EXPERIMENTS.md: strong universality costs a real bandwidth/op premium on
+machines without native 64-bit scalar multiply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, keys as keymod, multilinear as ml
+from .common import ns_per_byte, row, timeit
+
+B, N = 256, 1024
+N_BYTES = B * N * 4
+
+
+def run():
+    kb = keymod.KeyBuffer(seed=3)
+    hi, lo = map(jnp.asarray, kb.hi_lo(N + 1))
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(2)))
+    toks = jnp.asarray(rng.integers(0, 2**32, size=(B, N), dtype=np.uint64).astype(np.uint32))
+
+    t_ml = timeit(jax.jit(lambda t: ml.multilinear_hm(t, hi, lo)), toks)
+    row("table3/best-multilinear", t_ml * 1e6, f"{ns_per_byte(t_ml, N_BYTES):.3f} ns/B")
+    for name, fn in (
+        ("rabin-karp", baselines.rabin_karp),
+        ("sax", baselines.sax),
+        ("fnv1a", baselines.fnv1a),
+    ):
+        t = timeit(jax.jit(fn), toks)
+        row(f"table3/{name}", t * 1e6,
+            f"{ns_per_byte(t, N_BYTES):.3f} ns/B; x{t / t_ml:.1f} vs multilinear-hm"
+            f"{'' if t > t_ml else ' (FASTER -- see note)'}")

@@ -1,0 +1,54 @@
+"""Paper §3.2 + §5.5 analog: word-size trade-off (Fig 1, Fig 2, GMP table).
+
+Reproduces: (a) Stinson-ratio curves -- random-bit efficiency vs input
+size for K in {8,16,32,64}, {.. 128}, and the free-K optimum (Fig 1);
+(b) the compute cost model (z+L-1)^a / L with its L*=(z-1)/(a-1) optimum
+(Fig 2); (c) measured multiword timings K in {64, 128} on limb arithmetic
+(the paper's __uint128 experiment: K=128 saves 33% random bits but costs
+~3x the multiplies -> K=64 is the sweet spot, same conclusion here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keys as keymod, multilinear as ml, theory
+from .common import ns_per_byte, row, timeit
+
+M = 1 << 20  # input bits for ratio curves
+Z = 32
+
+
+def run():
+    # Fig 1 data points
+    for K in (32, 64, 128):
+        L = K - Z + 1
+        r = theory.stinson_ratio(M, L, Z)
+        row(f"wordsize/stinson-ratio/K{K}", 0.0, f"ratio={r:.3f} (paper: K64~2, K128~1.33)")
+    Lopt = max(1, round(theory.optimal_L_memory(M, Z)))
+    row("wordsize/stinson-ratio/free-K", 0.0,
+        f"L*={Lopt}: ratio={theory.stinson_ratio(M, Lopt, Z):.3f} (->1 for large M)")
+    # Fig 2: compute-optimal L
+    a = 1.5
+    row("wordsize/compute-optimum", 0.0,
+        f"a={a}: L*={theory.optimal_L_compute(Z, a):.0f} (paper: 62); "
+        f"cost(L*)={theory.compute_cost_per_bit(62, Z, a):.1f} vs cost(512)="
+        f"{theory.compute_cost_per_bit(512, Z, a):.1f}")
+    # measured: K=64 (2 limbs) vs K=128 (4 limbs, 3 words/op)
+    B, N = 64, 1024
+    kb = keymod.KeyBuffer(seed=6)
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(5)))
+    toks = rng.integers(0, 2**32, size=(B, N), dtype=np.uint64).astype(np.uint32)
+    hi, lo = map(jnp.asarray, kb.hi_lo(N + 1))
+    t64 = timeit(jax.jit(lambda t: ml.multilinear(t, hi, lo)), jnp.asarray(toks))
+    n_ops = N // 3
+    k128 = jnp.asarray(kb.limbs(n_ops, 4))
+    toks128 = jnp.asarray(toks[:, : n_ops * 3].reshape(B, n_ops, 3))
+    t128 = timeit(jax.jit(lambda t: ml.multilinear_multiword(t, k128)), toks128)
+    nb = B * N * 4
+    nb128 = B * n_ops * 3 * 4
+    row("wordsize/K64-measured", t64 * 1e6, f"{ns_per_byte(t64, nb):.3f} ns/B")
+    row("wordsize/K128-measured", t128 * 1e6,
+        f"{ns_per_byte(t128, nb128):.3f} ns/B; x{(t128 / nb128) / (t64 / nb):.2f} "
+        f"per byte (paper __uint128: 1.38x slower; random bits -33%)")

@@ -1,0 +1,41 @@
+"""Hash-powered data pipeline demo: dedup + split + shard + Bloom filter.
+
+  PYTHONPATH=src python examples/hash_pipeline.py
+"""
+import numpy as np
+
+from repro.data import BloomFilter, HashPipeline, PipelineConfig
+from repro.data.synthetic import corpus
+
+
+def main():
+    print("=== Hash-powered data pipeline (paper technique at the data layer) ===\n")
+    cfg = PipelineConfig(seq_len=128, batch_size=4, eval_pct=2, dedup=True,
+                         n_shards=4, shard_id=0)
+    pipe = HashPipeline(cfg)
+    n_batches = 0
+    for batch in pipe.pack(corpus(seed=7, n_docs=2000, vocab=32000, dup_rate=0.15)):
+        n_batches += 1
+        if n_batches >= 20:
+            break
+    s = pipe.stats
+    print(f"documents seen:      {s['docs']}")
+    print(f"  duplicates caught: {s['dup']} (content fingerprints, 64-bit Multilinear)")
+    print(f"  eval split:        {s['eval']} (content-stable: h(doc) mod 100 < 2)")
+    print(f"  other shards:      {s['other_shard']} (uniform shard loads by h(doc) mod 4)")
+    print(f"  kept for shard 0:  {s['kept']}")
+    print(f"packed batches:      {n_batches} x (4, 128)\n")
+
+    bf = BloomFilter(n_items=10_000, fp_rate=1e-3)
+    rng = np.random.default_rng(1)
+    docs = [rng.integers(0, 2**31, size=8).astype(np.uint32) for _ in range(2000)]
+    for d in docs[:1000]:
+        bf.add(d)
+    fn = sum(d in bf for d in docs[:1000])
+    fp = sum(d in bf for d in docs[1000:])
+    print(f"Bloom filter (m={bf.m} bits, k={bf.k} Multilinear hashes): "
+          f"{fn}/1000 present (no false negatives), {fp}/1000 false positives")
+
+
+if __name__ == "__main__":
+    main()

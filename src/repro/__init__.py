@@ -1,0 +1,3 @@
+"""repro: strongly universal string hashing (Lemire & Kaser 2012) as a
+first-class feature of a multi-pod JAX LM training/serving framework."""
+__version__ = "1.0.0"

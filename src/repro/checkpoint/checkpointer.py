@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: npz shards + JSON manifest, Multilinear
+fingerprints (the paper's family doing integrity duty), atomic renames,
+keep-last-k, latest-VALID resume, and elastic resharding on load.
+
+Layout:
+  <dir>/step_<n>.tmp/...   (written)   -> atomic rename to <dir>/step_<n>/
+  <dir>/step_<n>/manifest.json         -- leaf paths, shapes, dtypes, fingerprints
+  <dir>/step_<n>/arrays.npz            -- the data
+
+Every array is stored UNSHARDED (gathered) with its logical PartitionSpec
+recorded; restore re-shards onto whatever mesh is live (elastic scaling:
+a restart with a different device count just builds a new mesh and loads).
+For 1000+-node scale the same layout shards the npz per host -- the
+manifest already carries per-leaf fingerprints so partial verification
+works; single-process here writes one file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ops import fingerprint_bytes
+from ..parallel import sharding as sh
+
+
+def _leaf_path(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_leaf_path(kp), leaf) for kp, leaf in flat], treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, state) -> str:
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat, _ = _flatten(state)
+        arrays, manifest = {}, {"step": step, "time": time.time(), "leaves": {}}
+        for i, (path, leaf) in enumerate(flat):
+            arr = np.asarray(jax.device_get(leaf))
+            if arr.dtype == jnp.bfloat16:
+                arr = arr.astype(np.float32)
+                stored_dtype = "bfloat16"
+            else:
+                stored_dtype = str(arr.dtype)
+            key = f"a{i}"
+            arrays[key] = arr
+            manifest["leaves"][path] = {
+                "key": key,
+                "shape": list(arr.shape),
+                "dtype": stored_dtype,
+                "fingerprint": f"{fingerprint_bytes(arr.tobytes()):016x}",
+            }
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def verify(self, step: int) -> bool:
+        path = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(path, "arrays.npz"))
+            for leaf_path, meta in manifest["leaves"].items():
+                arr = data[meta["key"]]
+                got = f"{fingerprint_bytes(arr.tobytes()):016x}"
+                if got != meta["fingerprint"]:
+                    return False
+            return True
+        except Exception:
+            return False
+
+    def latest_valid(self) -> int | None:
+        """Newest checkpoint whose every fingerprint verifies -- corrupt or
+        torn checkpoints (simulated node failure mid-write) are skipped."""
+        for s in reversed(self.steps()):
+            if self.verify(s):
+                return s
+        return None
+
+    def restore(self, step: int, like, mesh=None, fsdp_pods: bool = False):
+        """Load into the structure of `like` (a state pytree or its specs).
+        With `mesh`, arrays are placed with the rule-derived shardings --
+        this is the elastic-rescale path (any mesh shape works)."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        shardings = None
+        if mesh is not None:
+            from ..train.train_state import TrainState, state_shardings
+
+            if isinstance(like, TrainState):
+                shardings = state_shardings(like, mesh, fsdp_pods)
+        sh_flat = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec")) if shardings else None
+        out = []
+        for i, (kp, leaf) in enumerate(flat):
+            p = _leaf_path(kp)
+            meta = manifest["leaves"][p]
+            arr = data[meta["key"]]
+            want = fingerprint_bytes(arr.tobytes())
+            assert f"{want:016x}" == meta["fingerprint"], f"corrupt leaf {p}"
+            if meta["dtype"] == "bfloat16":
+                arr = arr.astype(jnp.bfloat16)
+            if sh_flat is not None:
+                out.append(jax.device_put(arr, sh_flat[i]))
+            else:
+                out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,17 @@
+"""repro.core -- the paper's contribution: strongly universal string hashing.
+
+Lemire & Kaser (2012), "Strongly universal string hashing is fast".
+See DESIGN.md for the TPU adaptation map.
+"""
+from . import baselines, gf, hostref, keys, limbs, multilinear, ops, theory, universality  # noqa: F401
+from .keys import KeyBuffer  # noqa: F401
+from .multilinear import multilinear as multilinear_hash  # noqa: F401
+from .multilinear import multilinear_2x2, multilinear_hm  # noqa: F401
+from .ops import (  # noqa: F401
+    FAMILIES,
+    fingerprint_bytes,
+    global_keys,
+    hash_tokens_device,
+    hash_tokens_host,
+    shard_assignment,
+)

@@ -1,0 +1,113 @@
+"""Baseline string hashes the paper compares against (§5.6, Tables 3-4).
+
+  - Rabin-Karp (polynomial, B=31 like Java's String.hashCode): not universal.
+  - SAX (shift-add-xor, Ramakrishna & Zobel): not universal.
+  - NH (Black et al., UMAC): *almost* universal, 64-bit output from 32-bit
+    chars, collision prob 1/2^32 -- but NOT uniform (paper shows the excess
+    zero-probability) and its low bits may fail almost-universality.
+  - FNV-1a: common non-universal baseline (extra, not in the paper tables).
+  - Zobrist: 3-wise independent table hashing for short strings (paper §1).
+
+All are vectorized jnp over (..., n) uint32 token arrays, like the
+Multilinear implementations, so the benchmark comparison is apples-to-apples
+on the same runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import limbs
+
+U32 = jnp.uint32
+
+
+def rabin_karp(tokens, base: int = 31):
+    """h = ((..(s_1*B + s_2)*B + ...)*B + s_n) mod 2^32."""
+    s = jnp.asarray(tokens).astype(U32)
+    b = jnp.uint32(base)
+
+    def step(h, x):
+        return h * b + x, None
+
+    # scan over char axis (sequential dependence is intrinsic to RK)
+    s_t = jnp.moveaxis(s, -1, 0)
+    h0 = jnp.zeros(s_t.shape[1:], U32)
+    h, _ = jax.lax.scan(step, h0, s_t)
+    return h
+
+
+def sax(tokens):
+    """Shift-Add-Xor: h ^= (h << 5) + (h >> 2) + s_i."""
+    s = jnp.asarray(tokens).astype(U32)
+
+    def step(h, x):
+        return h ^ ((h << 5) + (h >> 2) + x), None
+
+    s_t = jnp.moveaxis(s, -1, 0)
+    h0 = jnp.zeros(s_t.shape[1:], U32)
+    h, _ = jax.lax.scan(step, h0, s_t)
+    return h
+
+
+def fnv1a(tokens):
+    """FNV-1a over the 4 bytes of each 32-bit char."""
+    s = jnp.asarray(tokens).astype(U32)
+    prime = jnp.uint32(16777619)
+
+    def step(h, x):
+        for shift in (0, 8, 16, 24):
+            h = (h ^ ((x >> shift) & jnp.uint32(0xFF))) * prime
+        return h, None
+
+    s_t = jnp.moveaxis(s, -1, 0)
+    h0 = jnp.full(s_t.shape[1:], 2166136261, U32)
+    h, _ = jax.lax.scan(step, h0, s_t)
+    return h
+
+
+def nh(tokens, key_lo):
+    """NH (Black et al. 1999), §5.6:
+
+        h = sum_{i} (m_{2i-1} + s_{2i-1} mod 2^32)(m_{2i} + s_{2i} mod 2^32)
+            mod 2^64
+
+    32-bit chars -> 64-bit hash, collision prob 1/2^32 (almost universal,
+    NOT uniform). `key_lo`: (n,) uint32 keys. Returns (hi, lo) uint32 pair.
+    """
+    s = jnp.asarray(tokens).astype(U32)
+    n = s.shape[-1]
+    assert n % 2 == 0, "NH pads odd strings with a zero char (paper §5.6)"
+    k = jnp.asarray(key_lo)[:n]
+    a = k[0::2] + s[..., 0::2]          # mod 2^32 add
+    b = k[1::2] + s[..., 1::2]
+    p_hi, p_lo = limbs.mul32_full(a, b)  # one 32x32->64 per pair
+    from .multilinear import _reduce_sum64
+
+    acc = _reduce_sum64((p_hi, p_lo), axis=-1)
+    return acc
+
+
+def nh_u64(tokens, key_lo):
+    hi, lo = nh(tokens, key_lo)
+    return (np.asarray(hi).astype(np.uint64) << np.uint64(32)) | np.asarray(lo).astype(np.uint64)
+
+
+class Zobrist:
+    """Zobrist hashing (paper §1): 3-wise independent for short strings of
+    few distinct characters; storage nc random words. Used here for short
+    control-plane keys (e.g. (layer, expert) ids), not token streams.
+    """
+
+    def __init__(self, n_positions: int, alphabet: int, seed: int = 7, bits: int = 32):
+        rng = np.random.Generator(np.random.Philox(key=np.uint64(seed)))
+        self.table = jnp.asarray(
+            rng.integers(0, 2**bits, size=(n_positions, alphabet), dtype=np.uint64).astype(np.uint32)
+        )
+
+    def __call__(self, tokens):
+        s = jnp.asarray(tokens).astype(jnp.int32)
+        n = s.shape[-1]
+        vals = self.table[jnp.arange(n), s]  # (..., n) gather per position
+        return jax.lax.reduce(vals, jnp.uint32(0), jax.lax.bitwise_xor, dimensions=(vals.ndim - 1,))

@@ -1,0 +1,135 @@
+"""GF(2^32) Multilinear via carry-less multiplication + Barrett reduction
+(paper §4, Appendix B), adapted to TPU.
+
+TPU has **no CLMUL instruction** (DESIGN.md §2): the carry-less 32x32->63
+product is realized as 32 mask-and-xor partial products (bit-serial over one
+operand, lane-parallel over the data). That is ~32 VPU ops where x86 CLMUL
+costs one issue slot every ~8 cycles, so the paper's conclusion -- GF
+variants are not competitive with integer Multilinear -- holds *a fortiori*
+on TPU; the benchmark quantifies the gap instead of assuming it.
+
+Irreducible polynomial (same as the paper's code):
+    p(x) = x^32 + x^7 + x^6 + x^2 + 1
+which satisfies degree(p - x^32) <= 16, enabling the 2-multiplication
+Barrett reduction of Knezevic et al.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import limbs
+
+U32 = jnp.uint32
+POLY_LOW = 0xC5  # 1 + x^2 + x^6 + x^7  (low part of p; bit 32 implied)
+POLY_FULL_INT = (1 << 32) | POLY_LOW
+
+
+def clmul32(a, b):
+    """Carry-less 32x32 -> 63-bit product as (hi, lo) uint32.
+
+    Shift-and-xor over the 32 bits of `b`; each partial product is gated by
+    a lane mask. Fully vectorized over array inputs.
+    """
+    a = jnp.asarray(a, U32)
+    b = jnp.asarray(b, U32)
+    acc_hi = jnp.zeros(jnp.broadcast_shapes(a.shape, b.shape), U32)
+    acc_lo = jnp.zeros_like(acc_hi)
+    for i in range(32):
+        bit = (b >> np.uint32(i)) & np.uint32(1)
+        mask = (jnp.uint32(0) - bit).astype(U32)  # all-ones if bit set
+        part_lo = (a << np.uint32(i)) if i < 32 else jnp.zeros_like(a)
+        part_hi = (a >> np.uint32(32 - i)) if i > 0 else jnp.zeros_like(a)
+        acc_lo = acc_lo ^ (part_lo & mask)
+        acc_hi = acc_hi ^ (part_hi & mask)
+    return acc_hi, acc_lo
+
+
+def clmul32_with_poly(a):
+    """Carry-less product of 32-bit `a` with the 33-bit polynomial constant
+    p = 2^32 + POLY_LOW: equals clmul(a, POLY_LOW) xor (a << 32)."""
+    hi, lo = clmul32(a, jnp.uint32(POLY_LOW))
+    return hi ^ jnp.asarray(a, U32), lo
+
+
+def barrett_reduce(q_hi, q_lo):
+    """Reduce the 63-bit carry-less accumulator q mod p(x) -> 32 bits.
+
+    Paper Appendix B (Knezevic et al.):
+        Q1 = q >> 32 ; Q2 = Q1 (*) p ; Q3 = Q2 >> 32
+        r  = (q xor (Q3 (*) p)) mod 2^32
+    """
+    q1 = q_hi
+    q2_hi, q2_lo = clmul32_with_poly(q1)
+    q3 = q2_hi
+    f_hi, f_lo = clmul32_with_poly(q3)
+    return q_lo ^ f_lo
+
+
+def gf_multilinear(tokens, keys32):
+    """GF MULTILINEAR (Eq. 6): xor-accumulate m_{i+1} (*) s_i, Barrett at end.
+
+    tokens: (..., n) uint32; keys32: (n+1,) uint32. Returns (...,) uint32.
+    """
+    s = jnp.asarray(tokens).astype(U32)
+    n = s.shape[-1]
+    k = jnp.asarray(keys32)[1 : n + 1]
+    p_hi, p_lo = clmul32(k, s)
+    acc_hi = _xor_reduce(p_hi)
+    acc_lo = _xor_reduce(p_lo) ^ jnp.asarray(keys32)[0]
+    return barrett_reduce(acc_hi, acc_lo)
+
+
+def gf_multilinear_hm(tokens, keys32):
+    """GF MULTILINEAR-HM: half the carry-less products.
+
+    NOTE (faithful to Appendix B): the pairing uses XOR as the GF(2) addition
+    (m_{2i} ^ s_{2i-1}) (*) (m_{2i+1} ^ s_{2i}).
+    """
+    s = jnp.asarray(tokens).astype(U32)
+    n = s.shape[-1]
+    assert n % 2 == 0
+    k = jnp.asarray(keys32)[1 : n + 1]
+    a = k[0::2] ^ s[..., 0::2]
+    b = k[1::2] ^ s[..., 1::2]
+    p_hi, p_lo = clmul32(a, b)
+    acc_hi = _xor_reduce(p_hi)
+    acc_lo = _xor_reduce(p_lo) ^ jnp.asarray(keys32)[0]
+    return barrett_reduce(acc_hi, acc_lo)
+
+
+def _xor_reduce(x):
+    # xor is associative: single fused lax.reduce along the char axis.
+    return jax.lax.reduce(x, jnp.uint32(0), jax.lax.bitwise_xor, dimensions=(x.ndim - 1,))
+
+
+# ---------------------------------------------------------------------------
+# Pure-python / numpy references for tests
+# ---------------------------------------------------------------------------
+
+def clmul_ref(a: int, b: int) -> int:
+    """Bit-at-a-time carry-less product over python ints (ground truth)."""
+    acc = 0
+    i = 0
+    while b >> i:
+        if (b >> i) & 1:
+            acc ^= a << i
+        i += 1
+    return acc
+
+
+def poly_mod_ref(q: int, p: int = POLY_FULL_INT) -> int:
+    """Naive GF(2)[x] long division remainder (ground truth)."""
+    dp = p.bit_length() - 1
+    while q.bit_length() - 1 >= dp and q:
+        q ^= p << (q.bit_length() - 1 - dp)
+    return q
+
+
+def gf_multilinear_ref(tokens, keys32) -> int:
+    """Ground-truth GF Multilinear over python ints."""
+    acc = int(keys32[0])
+    for i, t in enumerate(tokens):
+        acc ^= clmul_ref(int(keys32[i + 1]), int(t))
+    return poly_mod_ref(acc)

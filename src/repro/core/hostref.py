@@ -1,0 +1,59 @@
+"""Host-side (numpy uint64) Multilinear -- the data-pipeline fast path and
+the ground-truth oracle for the limb/JAX/Pallas implementations.
+
+numpy uint64 arithmetic wraps mod 2^64 exactly like the paper's C code, so
+these few lines ARE the paper's Appendix A, vectorized.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+U64 = np.uint64
+_32 = np.uint64(32)
+
+
+def multilinear_np(tokens: np.ndarray, keys_u64: np.ndarray) -> np.ndarray:
+    """(..., n) uint32 tokens, (>= n+1,) uint64 keys -> (...,) uint32."""
+    with np.errstate(over="ignore"):  # mod-2^64 wraparound is the algorithm
+        s = np.asarray(tokens).astype(U64)
+        n = s.shape[-1]
+        k = keys_u64[1 : n + 1]
+        acc = keys_u64[0] + (k * s).sum(axis=-1, dtype=U64)
+        return (acc >> _32).astype(np.uint32)
+
+
+def multilinear_hm_np(tokens: np.ndarray, keys_u64: np.ndarray) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        s = np.asarray(tokens).astype(U64)
+        n = s.shape[-1]
+        assert n % 2 == 0
+        k = keys_u64[1 : n + 1]
+        a = k[0::2] + s[..., 0::2]
+        b = k[1::2] + s[..., 1::2]
+        acc = keys_u64[0] + (a * b).sum(axis=-1, dtype=U64)
+        return (acc >> _32).astype(np.uint32)
+
+
+def multilinear_np_u64(tokens: np.ndarray, keys_u64: np.ndarray) -> np.ndarray:
+    """Full 64-bit accumulator (before >>32) -- used for fingerprints where
+    we keep all 64 bits (checkpoint integrity, dedup)."""
+    with np.errstate(over="ignore"):
+        s = np.asarray(tokens).astype(U64)
+        n = s.shape[-1]
+        k = keys_u64[1 : n + 1]
+        return keys_u64[0] + (k * s).sum(axis=-1, dtype=U64)
+
+
+def python_int_oracle(tokens, keys, hm: bool = False) -> int:
+    """Arbitrary-precision ground truth (mod 2^64 made explicit)."""
+    mod = 1 << 64
+    acc = int(keys[0])
+    if hm:
+        for i in range(len(tokens) // 2):
+            acc += (int(keys[2 * i + 1]) + int(tokens[2 * i])) * (
+                int(keys[2 * i + 2]) + int(tokens[2 * i + 1])
+            )
+    else:
+        for i, t in enumerate(tokens):
+            acc += int(keys[i + 1]) * int(t)
+    return (acc % mod) >> 32

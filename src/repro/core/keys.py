@@ -1,0 +1,85 @@
+"""Random-key management for the Multilinear families.
+
+The paper's main cost caveat (§6) is the buffer of random numbers: strongly
+universal hashing of n-character strings *requires* ~K(n+1) random bits
+(Stinson's bound, §3.2), so keys must be generated, stored, streamed, and --
+for "unexpectedly long strings" -- extended on demand.
+
+We use a counter-based construction (Philox via numpy, and Threefry via
+jax.random for in-graph use): key i is a pure function of (seed, i), so
+extension never re-generates earlier keys and host/device paths agree
+bit-exactly. The buffer is replicated across the mesh (it is part of the
+hash *function*, not the data) and streamed HBM->VMEM by the Pallas kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_PHILOX_BLOCK = 4  # philox4x64 emits 4 u64 per counter tick
+
+
+def generate_keys_u64(seed: int, start: int, count: int) -> np.ndarray:
+    """Deterministic uint64 keys m_start .. m_{start+count-1} for `seed`.
+
+    Pure function of (seed, index): slicing [start, start+count) out of the
+    infinite Philox stream, so on-demand extension (paper §6) is O(count).
+    """
+    # Philox counter starts at block `start // 4`; generate enough blocks.
+    first_block = start // _PHILOX_BLOCK
+    last_block = (start + count + _PHILOX_BLOCK - 1) // _PHILOX_BLOCK
+    nblocks = last_block - first_block
+    bitgen = np.random.Philox(key=np.uint64(seed), counter=[first_block, 0, 0, 0])
+    gen = np.random.Generator(bitgen)
+    raw = gen.integers(0, 2**64, size=nblocks * _PHILOX_BLOCK, dtype=np.uint64)
+    off = start - first_block * _PHILOX_BLOCK
+    return raw[off : off + count]
+
+
+def split_hi_lo(keys_u64: np.ndarray):
+    """uint64 keys -> (hi, lo) uint32 planes (little-endian limbs)."""
+    hi = (keys_u64 >> np.uint64(32)).astype(np.uint32)
+    lo = (keys_u64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return hi, lo
+
+
+class KeyBuffer:
+    """Growable deterministic buffer of 64-bit keys.
+
+    `ensure(n)` guarantees keys m_1..m_n exist (index 0 is m_1). Growth is
+    amortized-doubling so hashing a stream of unknown length costs O(total)
+    key generation, per the paper's §6 recommendation.
+    """
+
+    def __init__(self, seed: int = 0x5EED, initial: int = 4096):
+        self.seed = int(seed)
+        self._keys = generate_keys_u64(self.seed, 0, initial)
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    def ensure(self, n: int) -> None:
+        cur = len(self._keys)
+        if n <= cur:
+            return
+        new = max(n, cur * 2)
+        extra = generate_keys_u64(self.seed, cur, new - cur)
+        self._keys = np.concatenate([self._keys, extra])
+
+    def u64(self, n: int) -> np.ndarray:
+        self.ensure(n)
+        return self._keys[:n]
+
+    def hi_lo(self, n: int):
+        return split_hi_lo(self.u64(n))
+
+    def limbs(self, n_ops: int, nlimbs: int) -> np.ndarray:
+        """(n_ops+1, nlimbs) uint32 little-endian keys of width 32*nlimbs."""
+        need_u64 = (n_ops + 1) * ((nlimbs + 1) // 2)
+        raw = self.u64(need_u64)
+        words = np.zeros(((n_ops + 1), nlimbs), dtype=np.uint32)
+        flat_hi, flat_lo = split_hi_lo(raw)
+        inter = np.empty(2 * len(raw), dtype=np.uint32)
+        inter[0::2] = flat_lo
+        inter[1::2] = flat_hi
+        words[:] = inter[: (n_ops + 1) * nlimbs].reshape(n_ops + 1, nlimbs)
+        return words

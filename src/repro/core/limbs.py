@@ -1,0 +1,200 @@
+"""32-bit limb arithmetic for mod-2^64 / mod-2^(32*n) integer math in JAX.
+
+TPU v5e has no native 64-bit integer datapath: the VPU is 8x128 lanes of
+32-bit ALUs. All ``mod 2^64`` arithmetic required by the Multilinear hash
+families (Lemire & Kaser 2012, Thm 3.1) is therefore expressed over pairs
+(hi, lo) of uint32 arrays. This module is the single source of truth for
+that arithmetic; the Pallas kernels and the pure-jnp reference both use it.
+
+A "u64" is a tuple ``(hi, lo)`` of equally-shaped uint32 arrays.
+A "u32xN" multiword integer is a tuple of N uint32 limbs, little-endian
+(``limbs[0]`` least significant) -- used for the K in {32,64,128} word-size
+experiments of paper §3.2/§5.5.
+
+All operations wrap silently (mod 2^32 per limb), matching unsigned C
+semantics that the paper's implementations rely on.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+# numpy scalar (not jnp): stays a literal in jaxprs, so Pallas kernel bodies
+# using these helpers do not capture array constants.
+_MASK16 = np.uint32(0xFFFF)
+
+
+def _u32(x):
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# 32x32 -> 64 multiply via 16-bit halves (4 hardware multiplies).
+# ---------------------------------------------------------------------------
+
+def mul32_full(a, b):
+    """Full 32x32 -> 64 product. Returns (hi, lo) uint32.
+
+    Classic schoolbook on 16-bit digits; all intermediates provably fit in
+    uint32 (see inline bounds). This is the TPU-native replacement for the
+    x86 single-instruction 64-bit multiply the paper counts.
+    """
+    a = _u32(a)
+    b = _u32(b)
+    a_lo = a & _MASK16
+    a_hi = a >> 16
+    b_lo = b & _MASK16
+    b_hi = b >> 16
+    ll = a_lo * b_lo                      # <= (2^16-1)^2 < 2^32
+    lh = a_lo * b_hi                      # < 2^32
+    hl = a_hi * b_lo                      # < 2^32
+    hh = a_hi * b_hi                      # < 2^32
+    mid = lh + (ll >> 16)                 # <= 2^32-2^17+1 + 2^16-1 < 2^32
+    mid2 = hl + (mid & _MASK16)           # < 2^32
+    lo = (mid2 << 16) | (ll & _MASK16)
+    hi = hh + (mid >> 16) + (mid2 >> 16)  # <= (2^16-1)^2 + 2^17 < 2^32
+    return hi, lo
+
+
+def mul32_lo(a, b):
+    """Low 32 bits of a*b (native wrapping multiply)."""
+    return _u32(a) * _u32(b)
+
+
+# ---------------------------------------------------------------------------
+# u64 = (hi, lo) ops
+# ---------------------------------------------------------------------------
+
+def u64(hi, lo):
+    return _u32(hi), _u32(lo)
+
+
+def u64_from_u32(x):
+    x = _u32(x)
+    return jnp.zeros_like(x), x
+
+
+def add64(a, b):
+    """(a_hi,a_lo) + (b_hi,b_lo) mod 2^64."""
+    a_hi, a_lo = a
+    b_hi, b_lo = b
+    lo = a_lo + b_lo
+    carry = (lo < a_lo).astype(U32)
+    hi = a_hi + b_hi + carry
+    return hi, lo
+
+
+def add64_u32(a, x):
+    """(hi,lo) + 32-bit x mod 2^64."""
+    a_hi, a_lo = a
+    x = _u32(x)
+    lo = a_lo + x
+    carry = (lo < x).astype(U32)
+    return a_hi + carry, lo
+
+
+def mul64_low(a, b):
+    """Low 64 bits of (a_hi,a_lo) * (b_hi,b_lo).
+
+    = full(a_lo,b_lo) + ((a_lo*b_hi + a_hi*b_lo) << 32).
+    3 full-width + 2 low multiplies -> 14 native 32-bit multiplies... no:
+    1 full (4 muls) + 2 low (2 muls) = 6 native multiplies.
+    """
+    a_hi, a_lo = a
+    b_hi, b_lo = b
+    hi, lo = mul32_full(a_lo, b_lo)
+    hi = hi + a_lo * b_hi + a_hi * b_lo
+    return hi, lo
+
+
+def mul64_u32(a, x):
+    """Low 64 bits of (a_hi,a_lo) * x for 32-bit x.
+
+    1 full (4 muls) + 1 low (1 mul) = 5 native multiplies. This is the
+    inner-loop cost of MULTILINEAR per character on TPU limb arithmetic.
+    """
+    a_hi, a_lo = a
+    x = _u32(x)
+    hi, lo = mul32_full(a_lo, x)
+    hi = hi + a_hi * x
+    return hi, lo
+
+
+def shr64_32(a):
+    """(hi, lo) >> 32 -> uint32 (the paper's final `>> 32`)."""
+    return a[0]
+
+
+def u64_to_numpy(a):
+    """Debug helper: (hi, lo) -> python-int-compatible numpy uint64."""
+    import numpy as np
+
+    hi = np.asarray(a[0], dtype=np.uint64)
+    lo = np.asarray(a[1], dtype=np.uint64)
+    return (hi << np.uint64(32)) | lo
+
+
+# ---------------------------------------------------------------------------
+# Generic little-endian multi-limb ops (K = 32*n bits), for §3.2/§5.5.
+# ---------------------------------------------------------------------------
+
+def mw_zero(nlimbs, shape=()):
+    return tuple(jnp.zeros(shape, U32) for _ in range(nlimbs))
+
+
+def mw_add(a, b):
+    """Multiword add mod 2^(32n). a, b tuples of n uint32 limbs (LE)."""
+    n = len(a)
+    out = []
+    carry = jnp.zeros_like(a[0])
+    for i in range(n):
+        s1 = a[i] + b[i]
+        c1 = (s1 < a[i]).astype(U32)
+        s2 = s1 + carry
+        c2 = (s2 < s1).astype(U32)
+        out.append(s2)
+        carry = c1 + c2  # <= 1 each; total carry <= 1 effective next limb
+    return tuple(out)
+
+
+def mw_add_u32(a, x):
+    n = len(a)
+    out = []
+    carry = _u32(x)
+    for i in range(n):
+        s = a[i] + carry
+        carry = (s < carry).astype(U32)
+        out.append(s)
+    return tuple(out)
+
+
+def mw_mul(a, b):
+    """Multiword schoolbook product mod 2^(32n): n^2/2-ish native muls.
+
+    Cost grows ~quadratically in limb count: this is the ``K^a`` (a≈1.58..2)
+    superlinear multiplication cost that drives the paper's Eq. 5 sweet-spot
+    analysis, reproduced on TPU limb arithmetic.
+    """
+    n = len(a)
+    acc = list(mw_zero(n, a[0].shape if hasattr(a[0], "shape") else ()))
+    acc = [jnp.zeros_like(a[0]) for _ in range(n)]
+    for i in range(n):
+        carry = jnp.zeros_like(a[0])
+        for j in range(n - i):
+            hi, lo = mul32_full(a[i], b[j])
+            k = i + j
+            # acc[k] += lo + carry ; propagate into hi chain
+            s1 = acc[k] + lo
+            c1 = (s1 < lo).astype(U32)
+            s2 = s1 + carry
+            c2 = (s2 < carry).astype(U32)
+            acc[k] = s2
+            carry = hi + c1 + c2
+        # drop final carry (mod 2^(32n))
+    return tuple(acc)
+
+
+def mw_shr_to_top(a, z_bits=32):
+    """Return the top `z_bits`=32 limb: equivalent of `>> (K - 32)`."""
+    return a[-1]

@@ -1,0 +1,201 @@
+"""The paper's hash families (Lemire & Kaser 2012, §2-§3) in JAX.
+
+Families (all strongly universal by Thm 3.1, K=64, L=33 -> >=32 usable bits;
+we follow the paper's §3.1 convention of 64-bit keys and a `>> 32` finish):
+
+  MULTILINEAR       h(s) = (m1 + sum_i m_{i+1} s_i  mod 2^64) >> 32
+  MULTILINEAR-2x2   identical value, pairwise-unrolled evaluation order
+  MULTILINEAR-HM    h(s) = (m1 + sum_i (m_{2i}+s_{2i-1})(m_{2i+1}+s_{2i})
+                            mod 2^64) >> 32          (n even)
+
+All arithmetic is over 32-bit limbs (see `limbs.py`): this is the TPU
+adaptation -- mod-2^64 sums are associative/commutative, so lane-parallel
+partial sums reduce freely, which is what the Pallas kernel exploits.
+
+Shapes: `tokens` is (..., n) uint32/int32; `key_hi`/`key_lo` are (n+1,)
+uint32 (key 0 is m1). Output is (...,) uint32 hash values.
+
+Variable-length strings follow the paper exactly: append a character with
+value 1 (so no string ends in 0), then zero-pad -- for HM additionally pad
+to even length (§2). `hash_tokens` implements this policy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import limbs
+
+U32 = jnp.uint32
+
+
+def _as_u32_tokens(tokens):
+    # int32 token ids reinterpreted as unsigned (paper's Java advice: mask).
+    return jnp.asarray(tokens).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# MULTILINEAR
+# ---------------------------------------------------------------------------
+
+def multilinear(tokens, key_hi, key_lo):
+    """h(s) = (m1 + sum m_{i+1} s_i mod 2^64) >> 32, batched over leading dims."""
+    s = _as_u32_tokens(tokens)
+    n = s.shape[-1]
+    kh, kl = key_hi[1 : n + 1], key_lo[1 : n + 1]
+    # Per-character 64x32 products, lane-parallel.
+    p_hi, p_lo = limbs.mul64_u32((kh, kl), s)  # broadcasts key over batch
+    # Associative mod-2^64 reduction over the character axis.
+    acc = _reduce_sum64((p_hi, p_lo), axis=-1)
+    acc = limbs.add64(acc, (jnp.broadcast_to(key_hi[0], acc[0].shape),
+                            jnp.broadcast_to(key_lo[0], acc[0].shape)))
+    return limbs.shr64_32(acc)
+
+
+def multilinear_2x2(tokens, key_hi, key_lo):
+    """MULTILINEAR with 2-by-2 evaluation (Appendix A). Same value as
+    `multilinear`; kept as a distinct evaluation order because on CPU the
+    unroll is the paper's headline trick and on TPU it maps to a different
+    (pair-blocked) kernel schedule."""
+    s = _as_u32_tokens(tokens)
+    n = s.shape[-1]
+    assert n % 2 == 0, "2-by-2 requires even length (paper pads with 0)"
+    kh, kl = key_hi[1 : n + 1], key_lo[1 : n + 1]
+    pa = limbs.mul64_u32((kh[0::2], kl[0::2]), s[..., 0::2])
+    pb = limbs.mul64_u32((kh[1::2], kl[1::2]), s[..., 1::2])
+    pair = limbs.add64(pa, pb)
+    acc = _reduce_sum64(pair, axis=-1)
+    acc = limbs.add64(acc, (jnp.broadcast_to(key_hi[0], acc[0].shape),
+                            jnp.broadcast_to(key_lo[0], acc[0].shape)))
+    return limbs.shr64_32(acc)
+
+
+def multilinear_hm(tokens, key_hi, key_lo):
+    """MULTILINEAR-HM (half the multiplications, Eq. 1 / Thm 3.1).
+
+    Needs n even and keys m_1..m_{n+1}. Each pair costs one 64x64->64 low
+    product (6 native muls) vs 2x 64x32 (10) for MULTILINEAR -- the paper's
+    multiplication-halving, visible here as 6 vs 10 limb multiplies.
+    """
+    s = _as_u32_tokens(tokens)
+    n = s.shape[-1]
+    assert n % 2 == 0, "MULTILINEAR-HM requires even length (paper pads with 0)"
+    kh, kl = key_hi[1 : n + 1], key_lo[1 : n + 1]
+    a = limbs.add64_u32((kh[0::2], kl[0::2]), s[..., 0::2])   # m_{2i} + s_{2i-1}
+    b = limbs.add64_u32((kh[1::2], kl[1::2]), s[..., 1::2])   # m_{2i+1} + s_{2i}
+    prod = limbs.mul64_low(a, b)
+    acc = _reduce_sum64(prod, axis=-1)
+    acc = limbs.add64(acc, (jnp.broadcast_to(key_hi[0], acc[0].shape),
+                            jnp.broadcast_to(key_lo[0], acc[0].shape)))
+    return limbs.shr64_32(acc)
+
+
+def _reduce_sum64(a, axis):
+    """Tree-reduce (hi, lo) arrays mod 2^64 along `axis`.
+
+    lo sums wrap; carries counted exactly by comparing running sums is
+    sequential, so instead: sum lo in 64-bit *semantically* by splitting into
+    16-bit digits... On TPU we avoid sequence dependence with a two-digit
+    trick: sum(lo) mod 2^64 = sum(lo & 0xFFFF) + sum(lo >> 16) << 16, each
+    partial sum of m <= 2^16 terms fits 48 bits < 2^32 per 16-bit digit only
+    for short axes. For generality and exactness we use pairwise tree
+    reduction with carry at each level: log2(n) levels, fully lane-parallel.
+    """
+    hi, lo = a
+    n = hi.shape[axis]
+    # normalize axis to positive
+    ax = axis % hi.ndim
+    while n > 1:
+        half = n // 2
+        even_hi = jax.lax.slice_in_dim(hi, 0, 2 * half, stride=2, axis=ax)
+        odd_hi = jax.lax.slice_in_dim(hi, 1, 2 * half, stride=2, axis=ax)
+        even_lo = jax.lax.slice_in_dim(lo, 0, 2 * half, stride=2, axis=ax)
+        odd_lo = jax.lax.slice_in_dim(lo, 1, 2 * half, stride=2, axis=ax)
+        s_hi, s_lo = limbs.add64((even_hi, even_lo), (odd_hi, odd_lo))
+        if n % 2:
+            tail_hi = jax.lax.slice_in_dim(hi, n - 1, n, axis=ax)
+            tail_lo = jax.lax.slice_in_dim(lo, n - 1, n, axis=ax)
+            s_hi = jnp.concatenate([s_hi, tail_hi], axis=ax)
+            s_lo = jnp.concatenate([s_lo, tail_lo], axis=ax)
+        hi, lo = s_hi, s_lo
+        n = hi.shape[ax]
+    return jnp.squeeze(hi, axis=ax), jnp.squeeze(lo, axis=ax)
+
+
+# ---------------------------------------------------------------------------
+# Generic word size K = 32*nlimbs (paper §3.2 / §5.5): z=32 usable bits,
+# chars are (nlimbs-1) 32-bit words plus policy notes in benchmarks.
+# ---------------------------------------------------------------------------
+
+def multilinear_multiword(token_words, key_limbs):
+    """MULTILINEAR with K = 32*nlimbs, processing (nlimbs-1) 32-bit words of
+    input per multiplication (the paper's __uint128 experiment: K=128
+    processes 96 input bits per op, 33% fewer random bits, 3x the muls).
+
+    token_words: (..., n_ops, nlimbs-1) uint32 -- each row one character.
+    key_limbs:   (n_ops + 1, nlimbs) uint32 little-endian keys.
+    Returns (...,) uint32 (top 32 of K bits).
+    """
+    nlimbs = key_limbs.shape[-1]
+    n_ops = token_words.shape[-2]
+    s = jnp.asarray(token_words).astype(U32)
+    zero = jnp.zeros(s.shape[:-1], U32)
+    # character as multiword: (nlimbs-1) data words, top limb zero
+    char = tuple(s[..., j] for j in range(nlimbs - 1)) + (zero,)
+    keys = tuple(key_limbs[1 : n_ops + 1, j] for j in range(nlimbs))
+    prod = limbs.mw_mul(keys, char)
+    # reduce over ops axis sequentially in log-tree (reuse u64 trick per limb
+    # is wrong -- do exact mw_add tree).
+    acc = prod
+    n = acc[0].shape[-1]
+    ax = acc[0].ndim - 1
+    while n > 1:
+        half = n // 2
+        even = tuple(jax.lax.slice_in_dim(x, 0, 2 * half, stride=2, axis=ax) for x in acc)
+        odd = tuple(jax.lax.slice_in_dim(x, 1, 2 * half, stride=2, axis=ax) for x in acc)
+        summed = limbs.mw_add(even, odd)
+        if n % 2:
+            tail = tuple(jax.lax.slice_in_dim(x, n - 1, n, axis=ax) for x in acc)
+            summed = tuple(jnp.concatenate([a, t], axis=ax) for a, t in zip(summed, tail))
+        acc = summed
+        n = acc[0].shape[-1]
+    acc = tuple(jnp.squeeze(x, axis=ax) for x in acc)
+    m1 = tuple(jnp.broadcast_to(key_limbs[0, j], acc[0].shape) for j in range(nlimbs))
+    acc = limbs.mw_add(acc, m1)
+    return limbs.mw_shr_to_top(acc)
+
+
+# ---------------------------------------------------------------------------
+# Variable-length policy (paper §2, §3 + Thm 3.1 notes)
+# ---------------------------------------------------------------------------
+
+def prepare_variable_length(tokens, length, max_len, family="multilinear"):
+    """Append char value 1 at `length` (no string ends in 0), zero-pad to
+    `max_len` (+1 slot), and for HM ensure even padded length. Zero padding
+    after the 1-sentinel does not change the hash value (zero characters
+    contribute m*0=0), so equal-value strings of different lengths hash
+    differently while padding stays free -- exactly the paper's trick.
+
+    tokens: (..., max_len) int/uint32; length: (...,) int32.
+    Returns (..., padded_len) uint32 with padded_len even.
+    """
+    tokens = _as_u32_tokens(tokens)
+    *batch, L = tokens.shape
+    padded = L + 1 if (L + 1) % 2 == 0 else L + 2
+    out = jnp.zeros((*batch, padded), U32)
+    idx = jnp.arange(L, dtype=jnp.int32)
+    keep = idx < length[..., None]
+    out = out.at[..., :L].set(jnp.where(keep, tokens, 0))
+    out = jnp.where(
+        (jnp.arange(padded, dtype=jnp.int32) == length[..., None]),
+        jnp.uint32(1),
+        out,
+    )
+    return out
+
+
+FAMILIES = {
+    "multilinear": multilinear,
+    "multilinear_2x2": multilinear_2x2,
+    "multilinear_hm": multilinear_hm,
+}

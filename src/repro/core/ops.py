@@ -1,0 +1,142 @@
+"""Public hashing API: family registry + variable-length policy + fingerprints.
+
+This is what the rest of the framework imports. Device paths dispatch to the
+Pallas kernel (TPU) or the limb-jnp implementation (CPU/interpret); host
+paths use numpy uint64.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import baselines, gf, hostref, multilinear
+from .keys import KeyBuffer
+
+_DEFAULT_SEED = 0x1E53  # "LEKA" -- Lemire/Kaser
+
+# process-wide deterministic key buffer (replicated everywhere; see keys.py)
+_GLOBAL_KEYS = KeyBuffer(seed=_DEFAULT_SEED)
+
+
+def global_keys() -> KeyBuffer:
+    return _GLOBAL_KEYS
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    name: str
+    device_fn: Callable          # (tokens, key_hi, key_lo) -> u32 hash
+    host_fn: Callable | None     # (tokens, keys_u64) -> u32 hash
+    strongly_universal: bool
+    needs_even: bool
+
+
+FAMILIES: dict[str, Family] = {
+    "multilinear": Family("multilinear", multilinear.multilinear, hostref.multilinear_np, True, False),
+    "multilinear_2x2": Family("multilinear_2x2", multilinear.multilinear_2x2, hostref.multilinear_np, True, True),
+    "multilinear_hm": Family("multilinear_hm", multilinear.multilinear_hm, hostref.multilinear_hm_np, True, True),
+}
+
+
+def pad_even(tokens: np.ndarray) -> np.ndarray:
+    n = tokens.shape[-1]
+    if n % 2 == 0:
+        return tokens
+    pad = [(0, 0)] * (tokens.ndim - 1) + [(0, 1)]
+    return np.pad(tokens, pad)
+
+
+def hash_tokens_host(
+    tokens: np.ndarray,
+    family: str = "multilinear_hm",
+    keys: KeyBuffer | None = None,
+    variable_length: bool = True,
+) -> np.ndarray:
+    """Hash (..., n) uint32 token arrays on the host (numpy uint64 path).
+
+    variable_length=True applies the paper's append-1 rule so prefixes of
+    each other hash independently; fixed-length callers may skip it.
+    """
+    fam = FAMILIES[family]
+    kb = keys or _GLOBAL_KEYS
+    s = np.asarray(tokens, dtype=np.uint32)
+    if variable_length:
+        pad = [(0, 0)] * (s.ndim - 1) + [(0, 1)]
+        s = np.pad(s, pad)
+        s[..., -1] = 1
+    if fam.needs_even:
+        s = pad_even(s)
+    ku = kb.u64(s.shape[-1] + 1)
+    return fam.host_fn(s, ku)
+
+
+def hash_tokens_device(
+    tokens,
+    family: str = "multilinear_hm",
+    keys: KeyBuffer | None = None,
+    use_kernel: bool = False,
+):
+    """In-graph hash of (..., n) token arrays (fixed length; jit-safe).
+
+    `use_kernel=True` routes through the Pallas kernel (TPU target /
+    interpret mode); default is the fused limb-jnp path that XLA handles
+    well on every backend.
+    """
+    fam = FAMILIES[family]
+    kb = keys or _GLOBAL_KEYS
+    n = tokens.shape[-1]
+    if fam.needs_even and n % 2:
+        pad = [(0, 0)] * (tokens.ndim - 1) + [(0, 1)]
+        tokens = jnp.pad(tokens, pad)
+        n += 1
+    hi, lo = kb.hi_lo(n + 1)
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        return kops.multilinear_hash(tokens, jnp.asarray(hi), jnp.asarray(lo), family=family)
+    return fam.device_fn(tokens, jnp.asarray(hi), jnp.asarray(lo))
+
+
+def fingerprint_bytes(data: bytes, keys: KeyBuffer | None = None, chunk_words: int = 1 << 16) -> int:
+    """64-bit Multilinear fingerprint of a byte string (checkpoint integrity).
+
+    Bytes are padded to a whole number of 32-bit words, length-prepended
+    (paper's variable-length extension: prepend |s|, then the content), and
+    folded chunkwise: chunk fingerprints are themselves a string of 64-bit
+    values hashed again, so arbitrarily long buffers need only `chunk_words`
+    keys (two-level tree -- same trick UMAC uses, strongly universal at each
+    level).
+    """
+    kb = keys or _GLOBAL_KEYS
+    n_bytes = len(data)
+    pad = (-n_bytes) % 4
+    arr = np.frombuffer(data + b"\0" * pad, dtype="<u4")
+    arr = np.concatenate([np.asarray([n_bytes & 0xFFFFFFFF, n_bytes >> 32], np.uint32), arr])
+    ku = kb.u64(chunk_words + 1)
+    fps = []
+    for i in range(0, len(arr), chunk_words):
+        chunk = arr[i : i + chunk_words]
+        fps.append(hostref.multilinear_np_u64(chunk.astype(np.uint32), ku))
+    if len(fps) == 1:
+        return int(fps[0])
+    # level 2: hash the vector of 64-bit fingerprints as 32-bit halves
+    flat = np.asarray(fps, dtype=np.uint64)
+    words = np.empty(2 * len(flat), np.uint32)
+    words[0::2] = (flat & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    words[1::2] = (flat >> np.uint64(32)).astype(np.uint32)
+    kb.ensure(len(words) + 1)
+    return int(hostref.multilinear_np_u64(words, kb.u64(len(words) + 1)))
+
+
+def shard_assignment(tokens: np.ndarray, n_shards: int, salt: int = 0) -> np.ndarray:
+    """Deterministic shard id per row of (..., n) tokens.
+
+    Uniformity of the strongly universal family ensures balanced shards in
+    expectation -- this is the paper-§1 "uniformity" property doing real work.
+    """
+    kb = KeyBuffer(seed=_DEFAULT_SEED ^ (salt * 0x9E3779B97F4A7C15 % (1 << 63)))
+    h = hash_tokens_host(tokens, family="multilinear_hm", keys=kb)
+    return (h % np.uint32(n_shards)).astype(np.int32)

@@ -1,0 +1,4 @@
+"""Hash-powered data pipeline (paper technique at the data layer)."""
+from . import dedup, pipeline, synthetic  # noqa: F401
+from .dedup import BloomFilter, ExactDedup  # noqa: F401
+from .pipeline import HashPipeline, PipelineConfig  # noqa: F401

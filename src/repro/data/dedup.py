@@ -1,0 +1,60 @@
+"""Dedup structures built on the paper's fingerprints: exact set + Bloom.
+
+The Bloom filter's k index functions are k independent MULTILINEAR hashes
+(strong universality => the standard false-positive analysis holds with
+exact constants, not heuristics)."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..core import hostref
+from ..core.keys import KeyBuffer
+
+
+class BloomFilter:
+    def __init__(self, n_items: int, fp_rate: float = 1e-3, seed: int = 0xB100):
+        self.m = max(64, int(-n_items * math.log(fp_rate) / (math.log(2) ** 2)))
+        self.k = max(1, int(self.m / n_items * math.log(2)))
+        self.bits = np.zeros((self.m + 63) // 64, np.uint64)
+        # k independent hash functions = k disjoint key windows
+        self.kb = KeyBuffer(seed=seed)
+
+    def _indices(self, item: np.ndarray) -> np.ndarray:
+        item = np.atleast_1d(item).astype(np.uint32)
+        idx = np.empty(self.k, np.int64)
+        for j in range(self.k):
+            keys = self.kb.u64((j + 1) * (len(item) + 1))[j * (len(item) + 1):]
+            h = int(hostref.multilinear_np_u64(item, keys))
+            idx[j] = h % self.m
+        return idx
+
+    def add(self, item) -> None:
+        for i in self._indices(item):
+            self.bits[i // 64] |= np.uint64(1) << np.uint64(i % 64)
+
+    def __contains__(self, item) -> bool:
+        return all(
+            (self.bits[i // 64] >> np.uint64(i % 64)) & np.uint64(1)
+            for i in self._indices(item)
+        )
+
+
+class ExactDedup:
+    """64-bit fingerprint set. Collision probability for N docs is
+    ~N^2 / 2^65 (strong universality): negligible below ~10^8 docs."""
+
+    def __init__(self, seed: int = 0xDED0):
+        self.kb = KeyBuffer(seed=seed)
+        self.seen: set[int] = set()
+
+    def check_and_add(self, tokens: np.ndarray) -> bool:
+        """True if new (admitted), False if duplicate."""
+        t = np.atleast_1d(tokens).astype(np.uint32)
+        t = np.concatenate([t, np.ones(1, np.uint32)])
+        fp = int(hostref.multilinear_np_u64(t, self.kb.u64(len(t) + 1)))
+        if fp in self.seen:
+            return False
+        self.seen.add(fp)
+        return True

@@ -1,0 +1,119 @@
+"""Hash-powered data pipeline: the paper's families doing production work.
+
+Every routing decision is a strongly universal hash of the *content*:
+  - train/eval split:   h(doc) mod 100 < eval_pct  (stable under reshards)
+  - shard assignment:   h(doc) mod n_shards        (uniform loads: §1)
+  - global shuffle:     sort by salted h(doc)      (reproducible epochs)
+  - dedup:              64-bit fingerprint set / Bloom filter
+All hashing is MULTILINEAR-HM on the host (numpy-u64 fast path); the salt
+folds the epoch so each epoch is an independent permutation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from ..core import hostref
+from ..core.keys import KeyBuffer
+from ..core.ops import hash_tokens_host
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    seq_len: int
+    batch_size: int            # per-host batch
+    eval_pct: int = 1          # percent of docs to eval split
+    n_shards: int = 1
+    shard_id: int = 0
+    dedup: bool = True
+    shuffle_salt: int = 0
+    pack: bool = True
+    vocab_size: int = 50000
+
+
+def _doc_hash(doc_tokens: np.ndarray, salt: int = 0) -> np.ndarray:
+    kb = KeyBuffer(seed=0xDA7A ^ salt)
+    return hash_tokens_host(doc_tokens, family="multilinear_hm", keys=kb)
+
+
+class HashPipeline:
+    """Deterministic, shardable, dedup'ing token pipeline.
+
+    Documents stream in as (doc_id, token array); out come packed
+    (tokens, labels, mask) batches for this shard. Entirely host-side;
+    every decision is reproducible from content + salt alone (no state to
+    checkpoint beyond the stream position).
+    """
+
+    def __init__(self, cfg: PipelineConfig):
+        self.cfg = cfg
+        self.seen_fingerprints: set[int] = set()
+        self.stats = {"docs": 0, "dup": 0, "eval": 0, "other_shard": 0, "kept": 0}
+
+    def admit(self, tokens: np.ndarray) -> str:
+        """Route one document: 'train' | 'eval' | 'dup' | 'other_shard'."""
+        self.stats["docs"] += 1
+        c = self.cfg
+        padded = _pad_even(tokens)
+        if c.dedup:
+            kb = KeyBuffer(seed=0xF1F0)
+            fp = int(hostref.multilinear_np_u64(
+                _append_one(padded), kb.u64(len(padded) + 2)))
+            if fp in self.seen_fingerprints:
+                self.stats["dup"] += 1
+                return "dup"
+            self.seen_fingerprints.add(fp)
+        h_split = int(_doc_hash(tokens, salt=0x5EA7)[()] if tokens.ndim == 1
+                      else _doc_hash(tokens, salt=0x5EA7))
+        if h_split % 100 < c.eval_pct:
+            self.stats["eval"] += 1
+            return "eval"
+        if c.n_shards > 1:
+            h_shard = int(_doc_hash(tokens, salt=0x511A)[()])
+            if h_shard % c.n_shards != c.shard_id:
+                self.stats["other_shard"] += 1
+                return "other_shard"
+        self.stats["kept"] += 1
+        return "train"
+
+    def epoch_order(self, doc_hashes: np.ndarray, epoch: int) -> np.ndarray:
+        """Reproducible global shuffle: argsort of salted re-hash."""
+        words = np.empty((len(doc_hashes), 2), np.uint32)
+        words[:, 0] = doc_hashes & 0xFFFFFFFF
+        words[:, 1] = doc_hashes >> 32 if doc_hashes.dtype == np.uint64 else 0
+        kb = KeyBuffer(seed=0xE90C ^ (epoch * 0x9E37))
+        order_keys = hash_tokens_host(words, family="multilinear_hm", keys=kb)
+        return np.argsort(order_keys, kind="stable")
+
+    def pack(self, docs: Iterator[np.ndarray]) -> Iterator[dict]:
+        """Pack admitted docs into (B, T+1) windows -> tokens/labels/mask."""
+        c = self.cfg
+        buf = np.zeros(0, np.int32)
+        rows = []
+        for doc in docs:
+            if self.admit(doc) != "train":
+                continue
+            buf = np.concatenate([buf, doc.astype(np.int32)])
+            while len(buf) >= c.seq_len + 1:
+                rows.append(buf[: c.seq_len + 1])
+                buf = buf[c.seq_len :]  # one-token overlap for labels
+                if len(rows) == c.batch_size:
+                    block = np.stack(rows)
+                    yield {
+                        "tokens": block[:, :-1],
+                        "labels": block[:, 1:],
+                        "mask": np.ones((c.batch_size, c.seq_len), np.float32),
+                    }
+                    rows = []
+
+
+def _append_one(tokens: np.ndarray) -> np.ndarray:
+    return np.concatenate([tokens.astype(np.uint32), np.ones(1, np.uint32)])
+
+
+def _pad_even(tokens: np.ndarray) -> np.ndarray:
+    if len(tokens) % 2 == 0:
+        return tokens
+    return np.concatenate([tokens, np.zeros(1, tokens.dtype)])

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's hot spot: batched Multilinear hashing.
+
+multilinear.py  -- integer families (MULTILINEAR / -HM), limb arithmetic
+gf_multilinear.py -- GF(2^32) carry-less families (no CLMUL on TPU: §5.4)
+ops.py          -- jit wrappers (padding, m1, >>32, backend dispatch)
+ref.py          -- pure-jnp oracles of record
+"""
+from . import gf_multilinear, multilinear, ops, ref  # noqa: F401
+from .ops import gf_hash, hash_tokens_batched, multilinear_hash  # noqa: F401

@@ -1,0 +1,111 @@
+"""Pallas kernel for GF MULTILINEAR (-HM): carry-less products without CLMUL.
+
+TPU has no carry-less multiply instruction, so the 32x32->63 GF(2)[x]
+product is 32 mask-and-xor partial products, bit-serial over the *key* bit
+index and lane-parallel over tokens. This kernel exists to QUANTIFY the
+paper's §5.4 conclusion on TPU (GF variants lose to integer Multilinear) --
+see benchmarks/gf_variants.py: ~32 VPU ops/char vs ~5 multiplies/char.
+
+Accumulation across tiles is XOR (GF(2) addition): order-independent, so
+the revisited-output pattern needs no carries at all. Barrett reduction is
+one call on (B, 2) accumulators -- done in the wrapper, negligible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+
+
+def _clmul_tile(a, b):
+    """Carry-less product of uint32 tiles -> (hi, lo). Unrolled 32 steps."""
+    import numpy as np
+
+    acc_hi = jnp.zeros_like(a)
+    acc_lo = jnp.zeros_like(a)
+    for i in range(32):
+        bit = (b >> i) & np.uint32(1)
+        mask = np.uint32(0) - bit
+        part_lo = a << i if i > 0 else a
+        acc_lo = acc_lo ^ (part_lo & mask)
+        if i > 0:
+            acc_hi = acc_hi ^ ((a >> (32 - i)) & mask)
+    return acc_hi, acc_lo
+
+
+def _gf_kernel(tok_ref, k_ref, out_ref):
+    toks = tok_ref[...]
+    k = k_ref[...]
+    p_hi, p_lo = _clmul_tile(jnp.broadcast_to(k[None, :], toks.shape), toks)
+    part_hi = jax.lax.reduce(p_hi, jnp.uint32(0), jax.lax.bitwise_xor, dimensions=(1,))
+    part_lo = jax.lax.reduce(p_lo, jnp.uint32(0), jax.lax.bitwise_xor, dimensions=(1,))
+    first = pl.program_id(1) == 0
+
+    @pl.when(first)
+    def _init():
+        out_ref[:, 0] = part_hi
+        out_ref[:, 1] = part_lo
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        out_ref[:, 0] = out_ref[:, 0] ^ part_hi
+        out_ref[:, 1] = out_ref[:, 1] ^ part_lo
+
+
+def _gf_hm_kernel(tok_ref, k_ref, out_ref):
+    toks = tok_ref[...]
+    bb, bn = toks.shape
+    tp = toks.reshape(bb, bn // 2, 2)
+    kp = k_ref[...].reshape(bn // 2, 2)
+    a = kp[None, :, 0] ^ tp[:, :, 0]
+    b = kp[None, :, 1] ^ tp[:, :, 1]
+    p_hi, p_lo = _clmul_tile(a, b)
+    part_hi = jax.lax.reduce(p_hi, jnp.uint32(0), jax.lax.bitwise_xor, dimensions=(1,))
+    part_lo = jax.lax.reduce(p_lo, jnp.uint32(0), jax.lax.bitwise_xor, dimensions=(1,))
+    first = pl.program_id(1) == 0
+
+    @pl.when(first)
+    def _init():
+        out_ref[:, 0] = part_hi
+        out_ref[:, 1] = part_lo
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        out_ref[:, 0] = out_ref[:, 0] ^ part_hi
+        out_ref[:, 1] = out_ref[:, 1] ^ part_lo
+
+
+@functools.partial(jax.jit, static_argnames=("family", "block_b", "block_n", "interpret"))
+def gf_hash_blocks(
+    tokens,
+    keys32,
+    *,
+    family: str = "gf_multilinear",
+    block_b: int = 8,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """(B, N) tokens x (N,) keys (no m1) -> (B, 2) xor-accumulators (hi, lo).
+
+    Zero-padding is free: clmul(k, 0) = 0 and for HM (k^0)(*)(k'^0) is a
+    key-only constant -- NOT zero -- so HM padding requires zero KEYS as
+    well (the wrapper pads both, same policy as the integer kernels).
+    """
+    B, N = tokens.shape
+    assert B % block_b == 0 and N % block_n == 0
+    kernel = _gf_kernel if family == "gf_multilinear" else _gf_hm_kernel
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b, N // block_n),
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 2), U32),
+        interpret=interpret,
+    )(tokens.astype(U32), keys32)

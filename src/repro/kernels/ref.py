@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (same signatures as ops.py).
+
+These ARE the reference implementations of record: the kernels must match
+them bit-exactly for every shape/dtype in the sweep tests, and they in turn
+match the numpy-uint64 / python-int oracles in tests/test_core_*.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import gf as gf_core
+from ..core import limbs
+from ..core import multilinear as ml
+
+
+def multilinear_accumulate_ref(tokens, key_hi, key_lo, family="multilinear"):
+    """(B, N) x (N,) keys (no m1) -> (B, 2) uint32 (hi, lo) of sum m_i s_i."""
+    toks = jnp.asarray(tokens).astype(jnp.uint32)
+    if family in ("multilinear", "multilinear_2x2"):
+        p_hi, p_lo = limbs.mul64_u32((key_hi[None, :], key_lo[None, :]), toks)
+    elif family == "multilinear_hm":
+        a = limbs.add64_u32((key_hi[None, 0::2], key_lo[None, 0::2]), toks[:, 0::2])
+        b = limbs.add64_u32((key_hi[None, 1::2], key_lo[None, 1::2]), toks[:, 1::2])
+        p_hi, p_lo = limbs.mul64_low(a, b)
+    else:
+        raise ValueError(family)
+    hi, lo = ml._reduce_sum64((p_hi, p_lo), axis=-1)
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def gf_accumulate_ref(tokens, keys32, family="gf_multilinear"):
+    """(B, N) x (N,) keys -> (B, 2) uint32 xor-accumulators (hi, lo)."""
+    toks = jnp.asarray(tokens).astype(jnp.uint32)
+    if family == "gf_multilinear":
+        p_hi, p_lo = gf_core.clmul32(keys32[None, :], toks)
+    elif family == "gf_multilinear_hm":
+        a = keys32[None, 0::2] ^ toks[:, 0::2]
+        b = keys32[None, 1::2] ^ toks[:, 1::2]
+        p_hi, p_lo = gf_core.clmul32(a, b)
+    else:
+        raise ValueError(family)
+    hi = gf_core._xor_reduce(p_hi)
+    lo = gf_core._xor_reduce(p_lo)
+    return jnp.stack([hi, lo], axis=-1)

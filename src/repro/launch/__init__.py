@@ -1,0 +1,4 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve entries,
+elastic restart logic. NOTE: dryrun must be executed as a fresh process
+(python -m repro.launch.dryrun) because it pins 512 host devices."""
+from .mesh import make_host_mesh, make_production_mesh  # noqa: F401

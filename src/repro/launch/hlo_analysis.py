@@ -1,0 +1,198 @@
+"""HLO static analysis with while-loop trip-count correction.
+
+XLA's `compiled.cost_analysis()` visits each while-loop BODY ONCE, so a
+scan-over-60-blocks program reports ~1/60th of its real FLOPs -- useless
+for rooflines. This module re-derives, from `compiled.as_text()`:
+
+  - matmul FLOPs (dot ops: 2 * prod(result) * prod(contracted dims)),
+  - collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute; per-device result bytes),
+  - both multiplied up the computation call graph, where a `while` edge
+    carries its trip count (parsed from the loop-condition constant).
+
+All numbers are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# computation headers start at column 0: `%name (params...) -> type {`
+# (params may contain nested tuple parens, so don't try to match them)
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \(")
+_OP_LINE = re.compile(r"^\s*(?:ROOT )?%?([\w.\-]+) = (.+)$")
+_SHAPE = re.compile(r"^\(?([a-z0-9]+)\[([\d,]*)\]")
+_CALL_EDGE = re.compile(r"(?:calls=|body=|condition=|to_apply=)%?([\w.\-]+)")
+_TRIP = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_elems(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+def _first_shape_bytes(type_str: str) -> int:
+    """Bytes of the first (or only) shape in a result type string."""
+    total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(dt, dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    transcendentals: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(lambda: [0, 0.0]))
+    edges: list = dataclasses.field(default_factory=list)  # (callee, multiplier)
+    max_const: int = 1
+
+
+def parse_hlo(text: str) -> dict:
+    """-> {comp_name: CompStats}, plus '__entry__' key with the entry name."""
+    comps: dict[str, CompStats] = {}
+    entry = None
+    cur = None
+    cur_shapes: dict[str, tuple] = {}
+    pending_while: list = []
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line) if not raw[:1].isspace() else None
+        if hdr is not None and line.endswith("{"):
+            cur = hdr.group(1)
+            comps[cur] = CompStats()
+            cur_shapes = {}
+            if raw.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None or not line.strip() or line.strip() == "}":
+            if line.strip() == "}":
+                cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        sm = _SHAPE.match(rest)
+        if sm and sm.group(1) in _DTYPE_BYTES:
+            cur_shapes[name] = (sm.group(1),
+                                tuple(int(d) for d in sm.group(2).split(",") if d))
+        st = comps[cur]
+        # constants (for while trip counts living in condition computations)
+        tm = _TRIP.search(rest)
+        if tm:
+            st.max_const = max(st.max_const, int(tm.group(1)))
+        # collectives
+        for c in COLLECTIVES:
+            if re.search(rf"(^|\) )({c})\(", rest) or f" {c}(" in rest.split(", calls")[0][:160]:
+                st.coll[c][0] += 1
+                st.coll[c][1] += _first_shape_bytes(rest.split(c)[0])
+                break
+        # dot flops
+        if " dot(" in rest:
+            flops = _dot_flops(rest, cur_shapes)
+            st.dot_flops += flops
+        if re.search(r" (exponential|log|tanh|rsqrt|logistic)\(", rest):
+            dt = cur_shapes.get(name)
+            if dt:
+                st.transcendentals += _shape_elems(dt[0], ",".join(map(str, dt[1])))
+        # call edges
+        if " while(" in rest:
+            # trip count from XLA's own analysis: known_trip_count in the
+            # backend_config; fall back to the biggest constant in the
+            # condition computation (handled at visit time via "WHILE").
+            tm2 = re.search(r"known_trip_count\D*(\d+)", rest)
+            trip = int(tm2.group(1)) if tm2 else "WHILE"
+            for e in _CALL_EDGE.findall(rest):
+                st.edges.append((e, trip))
+        else:
+            for e in _CALL_EDGE.findall(rest):
+                st.edges.append((e, 1))
+    comps["__entry__"] = entry
+    return comps
+
+
+def _dot_flops(rest: str, shapes: dict) -> float:
+    out = _SHAPE.match(rest)
+    if not out or out.group(1) not in _DTYPE_BYTES:
+        return 0.0
+    result_elems = _shape_elems(out.group(1), out.group(2))
+    args = re.search(r"dot\(([^)]*)\)", rest)
+    if not args:
+        return 0.0
+    lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
+    lhs = shapes.get(lhs_name)
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+    contract = 1
+    if lhs and cd:
+        for d in cd.group(1).split(","):
+            if d:
+                contract *= lhs[1][int(d)]
+    return 2.0 * result_elems * contract
+
+
+def totals(text: str) -> dict:
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry__")
+    memo: dict[str, dict] = {}
+
+    def visit(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        st = comps.get(name)
+        if st is None or depth > 40:
+            return {"flops": 0.0, "trans": 0.0,
+                    "coll": defaultdict(lambda: [0, 0.0])}
+        out_coll = defaultdict(lambda: [0, 0.0])
+        for k, (cnt, b) in st.coll.items():
+            out_coll[k][0] += cnt
+            out_coll[k][1] += b
+        flops = st.dot_flops
+        trans = st.transcendentals
+        for callee, mult in st.edges:
+            sub = visit(callee, depth + 1)
+            if mult == "WHILE":
+                # trip count = the biggest integer constant found in the
+                # while's condition computation (scan upper bound)
+                cond_guess = comps.get(callee)
+                trip = None
+                # find sibling condition: use the max const among the callee
+                # and its condition partner; conservative fallback 1
+                trip = max(1, cond_guess.max_const if cond_guess else 1)
+                # condition computations have no dots; bodies get the trip
+                m = trip
+            else:
+                m = mult
+            flops += m * sub["flops"]
+            trans += m * sub["trans"]
+            for k, (cnt, b) in sub["coll"].items():
+                out_coll[k][0] += m * cnt
+                out_coll[k][1] += m * b
+        memo[name] = {"flops": flops, "trans": trans, "coll": out_coll}
+        return memo[name]
+
+    res = visit(entry) if entry else {"flops": 0.0, "trans": 0.0, "coll": {}}
+    coll = {k: {"count": int(v[0]), "bytes": float(v[1])}
+            for k, v in res["coll"].items()}
+    total_b = sum(v["bytes"] for v in coll.values())
+    return {
+        "dot_flops_per_device": res["flops"],
+        "transcendentals_per_device": res["trans"],
+        "collectives": coll,
+        "collective_bytes_per_device": total_b,
+    }

@@ -1,0 +1,3 @@
+"""Model zoo: composable layers + per-family assemblies (see DESIGN.md §4)."""
+from . import attention, encdec, layers, model_zoo, moe, ssm, transformer  # noqa: F401
+from .model_zoo import ModelAPI, build  # noqa: F401

@@ -1,0 +1,273 @@
+"""Attention: GQA with flash-style chunked softmax (pure JAX), sliding
+windows (gemma3 local:global), KV caches (linear + ring-buffer), and
+flash-decoding-friendly cache attention for SP-sharded long contexts.
+
+Memory notes (these drive the roofline):
+- prefill/train never materializes (T, T) scores: outer loop over q chunks,
+  inner lax.scan over kv chunks with online max/sum (flash algorithm).
+- `causal_skip=True` uses a triangular schedule (q chunk i only visits kv
+  chunks 0..i): ~2x fewer attention FLOPs than the rectangular baseline.
+  This is a §Perf lever; the paper-faithful baseline keeps it off.
+- decode attends (B, 1, H) query against the cache; for long_500k the cache
+  S-dim is sharded over 'data' and GSPMD turns the softmax/max/sum into the
+  flash-decoding partial-softmax + all-reduce pattern automatically.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constraint
+from . import layers
+
+NEG_INF = -1e30
+
+
+def attention_init(rng, d_model, n_heads, n_kv, d_head, bias=False):
+    """Projections stored FUSED-2D -- (d_model, H*dh) -- so TP sharding of
+    the output dim never depends on head-count divisibility (56 heads shard
+    fine over model=16: the fused 7168 dim splits evenly; heads are a view).
+    """
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": {"w": jax.random.normal(rq, (d_model, n_heads * d_head), jnp.float32) * s},
+        "wk": {"w": jax.random.normal(rk, (d_model, n_kv * d_head), jnp.float32) * s},
+        "wv": {"w": jax.random.normal(rv, (d_model, n_kv * d_head), jnp.float32) * s},
+        "wo": {"w": jax.random.normal(ro, (n_heads * d_head, d_model), jnp.float32)
+               * (1.0 / math.sqrt(n_heads * d_head))},
+    }
+    if bias:
+        for key, n in (("wq", n_heads * d_head), ("wk", n_kv * d_head),
+                       ("wv", n_kv * d_head), ("wo", d_model)):
+            p[key]["b"] = jnp.zeros((n,), jnp.float32)
+    return p
+
+
+def _proj(p, x, dtype):
+    y = x @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def qkv_project(params, x, d_head, dtype=jnp.bfloat16):
+    B, T, _ = x.shape
+    q = _proj(params["wq"], x, dtype).reshape(B, T, -1, d_head)
+    k = _proj(params["wk"], x, dtype).reshape(B, T, -1, d_head)
+    v = _proj(params["wv"], x, dtype).reshape(B, T, -1, d_head)
+    return q, k, v
+
+
+def out_project(params, attn_out, dtype=jnp.bfloat16):
+    B, T = attn_out.shape[:2]
+    y = attn_out.reshape(B, T, -1) @ params["wo"]["w"].astype(dtype)
+    if "b" in params["wo"]:
+        y = y + params["wo"]["b"].astype(dtype)
+    return y
+
+
+def _chunk_scores_mask(q_pos, k_pos, causal, window, kv_len=None):
+    """(Cq, Ck) additive mask from absolute positions."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.broadcast_to(jnp.ones((), bool), (dq.shape[0], dk.shape[1]))
+    if causal:
+        ok = ok & (dk <= dq)
+    if window is not None:
+        ok = ok & ((dq - dk) < window)
+    if kv_len is not None:
+        ok = ok & (dk < kv_len)  # internal kv padding
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset=0,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+    causal_skip: bool = False,
+):
+    """Online-softmax attention. q: (B, Tq, H, dh); k/v: (B, Tk, Hkv, dh).
+
+    Returns (B, Tq, H, dh). No (Tq, Tk) materialization; per-step memory is
+    (B, Hkv, G, Cq, Ck) scores.
+    """
+    B, Tq, H, dh = q.shape
+    Tk_real, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    chunk_q = min(chunk_q, Tq)
+    chunk_k = min(chunk_k, Tk_real)
+    # internal padding to chunk multiples (masked out via kv_len / q slice)
+    pad_q = (-Tq) % chunk_q
+    pad_k = (-Tk_real) % chunk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Tq_p, Tk = Tq + pad_q, Tk_real + pad_k
+    kv_len = Tk_real if pad_k else None
+    nq, nk = Tq_p // chunk_q, Tk // chunk_k
+    scale = 1.0 / math.sqrt(dh)
+
+    # CONTEXT-PARALLEL layout (perf it3, see results/perf_log.md):
+    # q is sharded over 'model' on its T dim (the model axis partitions the
+    # query rows); k/v are gathered whole (GQA-expanded once, outside the
+    # loop). Every kv-chunk step is then collective-free and the weight
+    # traffic is pure FSDP. Compared to Megatron head-TP this trades
+    # 2 x (B,T,D) activation gathers per layer for one (B,T,Hkv,dh) k/v
+    # gather -- a ~12x collective-byte reduction at 64k tokens/chip.
+    from ..parallel.sharding import seq_axis
+
+    q = constraint(q, "batch", seq_axis(Tq_p), None, None)
+    k = constraint(k, "batch", None, None, None)
+    v = constraint(v, "batch", None, None, None)
+    q_pos = q_offset + jnp.arange(Tq_p)
+
+    def kv_step(carry, ki):
+        acc, m, l = carry  # (B, H, Tq, dh) f32, (B, H, Tq), (B, H, Tq)
+        kc = jax.lax.dynamic_slice_in_dim(k, ki * chunk_k, chunk_k, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, ki * chunk_k, chunk_k, axis=1)
+        if G > 1:
+            # GQA expansion per chunk: k/v are REPLICATED across 'model'
+            # here, so the repeat is local (expanding a sharded head dim
+            # was the it1/it2 per-step-collective trap)
+            kc = jnp.repeat(kc, G, axis=2)
+            vc = jnp.repeat(vc, G, axis=2)
+        k_pos = ki * chunk_k + jnp.arange(chunk_k)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kc).astype(jnp.float32) * scale
+        s = s + _chunk_scores_mask(q_pos, k_pos, causal, window, kv_len)[None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(kc.dtype), vc
+        ).astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    # remat the kv step: flash backward must RECOMPUTE the (Tq, Ck) prob
+    # tile per step, never save it -- without this the stacked probs are the
+    # full (Tq, Tk) attention matrix again (the thing flash exists to avoid).
+    kv_step_remat = jax.checkpoint(
+        kv_step, policy=jax.checkpoint_policies.nothing_saveable)
+
+    acc0 = jnp.zeros((B, H, Tq_p, dh), jnp.float32)
+    m0 = jnp.full((B, H, Tq_p), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Tq_p), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(kv_step_remat, (acc0, m0, l0), jnp.arange(nk))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = jnp.moveaxis(out, 1, 2)  # (B, Tq_p, H, dh)
+    return out[:, :Tq]
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+def make_linear_cache(B, S, n_kv, d_head, dtype=jnp.bfloat16, sp_shard=False):
+    """Standard cache: {'k','v'} of (B, S, Hkv, dh). sp_shard shards the S
+    dim over 'data' (long-context flash-decoding). Cache dicts carry NO
+    metadata leaves so they stack cleanly across scanned layers; ring caches
+    are identified by the presence of a 'pos' buffer."""
+    shape = (B, S, n_kv, d_head)
+    k = jnp.zeros(shape, dtype)
+    v = jnp.zeros(shape, dtype)
+    if sp_shard:
+        k = constraint(k, None, "data", None, None)
+        v = constraint(v, None, "data", None, None)
+    return {"k": k, "v": v}
+
+
+def make_ring_cache(B, W, n_kv, d_head, dtype=jnp.bfloat16):
+    """Sliding-window ring buffer: (B, W, Hkv, dh) + absolute position tags
+    (-1 = empty). Keeps long_500k local-attention layers O(window).
+    Invariant: position p lives in slot p % W."""
+    return {
+        "k": jnp.zeros((B, W, n_kv, d_head), dtype),
+        "v": jnp.zeros((B, W, n_kv, d_head), dtype),
+        "pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+def is_ring(cache) -> bool:
+    return "pos" in cache
+
+
+def cache_insert(cache, k_new, v_new, index):
+    """Insert (B, 1, Hkv, dh) at absolute position `index` (traced scalar)."""
+    index = jnp.asarray(index, jnp.int32)
+    if is_ring(cache):
+        W = cache["k"].shape[1]
+        slot = index % W
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        cache["pos"] = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.reshape(index, (1,)), (slot,))
+        return cache
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, index, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, index, 0, 0))
+    return cache
+
+
+def ring_prefill(cache, k, v, T):
+    """Fill a ring cache from a length-T prefill, preserving the slot = p %
+    W invariant so later cache_insert() overwrites the oldest entry."""
+    W = cache["k"].shape[1]
+    if T < W:
+        nk = jnp.zeros_like(cache["k"]).at[:, :T].set(k)
+        nv = jnp.zeros_like(cache["v"]).at[:, :T].set(v)
+        pos = jnp.where(jnp.arange(W) < T, jnp.arange(W), -1).astype(jnp.int32)
+        return dict(cache, k=nk, v=nv, pos=pos)
+    # last W positions T-W..T-1; position p -> slot p % W (static roll)
+    shift = (T - W) % W
+    nk = jnp.roll(k[:, -W:], shift, axis=1)
+    nv = jnp.roll(v[:, -W:], shift, axis=1)
+    pos = jnp.roll(T - W + jnp.arange(W), shift).astype(jnp.int32)
+    return dict(cache, k=nk, v=nv, pos=pos)
+
+
+def linear_prefill(cache, k, v, T):
+    nk = jnp.zeros_like(cache["k"]).at[:, :T].set(k)
+    nv = jnp.zeros_like(cache["v"]).at[:, :T].set(v)
+    return dict(cache, k=nk, v=nv)
+
+
+def decode_attend(cache, q, index, window=None):
+    """q: (B, 1, H, dh) against the cache at decode position `index`.
+
+    Full softmax over the cache S dim -- O(S) per token. When the cache is
+    SP-sharded, the max/sum reductions become all-reduces over 'data'
+    (flash-decoding). Returns (B, 1, H, dh).
+    """
+    B, _, H, dh = q.shape
+    Hkv = cache["k"].shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, 1, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, cache["k"]).astype(jnp.float32) * scale
+    if is_ring(cache):
+        pos = cache["pos"]  # (W,)
+        ok = (pos >= 0) & (pos <= index)
+        if window is not None:
+            ok &= (index - pos) < window
+    else:
+        S = cache["k"].shape[1]
+        pos = jnp.arange(S)
+        ok = pos <= index
+        if window is not None:
+            ok &= (index - pos) < window
+    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(cache["v"].dtype), cache["v"])
+    return jnp.moveaxis(out, 3, 1).reshape(B, 1, H, dh)

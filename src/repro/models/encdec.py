@@ -1,0 +1,146 @@
+"""Whisper-style encoder-decoder backbone (conv frontend STUBBED per spec:
+input_specs() provides precomputed frame embeddings (B, S_enc, D)).
+
+Encoder: bidirectional attention over frames + sinusoidal positions.
+Decoder: causal self-attention + cross-attention (cached enc K/V) + MLP,
+learned positions. Built from the same sublayer primitives as transformer.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constraint
+from . import attention as attn
+from . import layers
+from .transformer import (SubDesc, _norm_apply, _norm_init, apply_sublayer,
+                          init_sublayer, init_sublayer_cache)
+
+
+def init_encdec(rng, cfg):
+    r = jax.random.split(rng, 8)
+    enc_desc = SubDesc(kind="attn", causal=False, ffn="dense")
+    dec_desc = SubDesc(kind="attn", causal=True, ffn="dense", cross=True)
+    params = {
+        "embed": layers.embedding_init(r[0], cfg.vocab_size, cfg.d_model),
+        "pos_dec": {"w": jax.random.normal(r[1], (8192, cfg.d_model), jnp.float32) * 0.01},
+        "enc_layers": jax.vmap(lambda k: init_sublayer(k, cfg, enc_desc))(
+            jax.random.split(r[2], cfg.n_encoder_layers)),
+        "blocks": jax.vmap(lambda k: {"s0": init_sublayer(k, cfg, dec_desc)})(
+            jax.random.split(r[3], cfg.n_layers)),
+        "enc_norm": _norm_init(cfg, r[4]),
+        "final_norm": _norm_init(cfg, r[5]),
+    }
+    return params
+
+
+def encode(params, cfg, frames, moe_groups=1):
+    """frames: (B, S_enc, D) precomputed conv-frontend output (stub)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B, S, D = frames.shape
+    x = frames.astype(dtype) + layers.sinusoidal_positions(S, D).astype(dtype)[None]
+    x = constraint(x, "batch", None, None)
+    desc = SubDesc(kind="attn", causal=False, ffn="dense")
+
+    def body(x, p):
+        y, _, _ = apply_sublayer(p, x, desc, cfg, mode="train",
+                                 moe_groups=moe_groups, dtype=dtype)
+        return y, None
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return _norm_apply(cfg, params["enc_norm"], x)
+
+
+def _decoder_descs():
+    return [SubDesc(kind="attn", causal=True, ffn="dense", cross=True)]
+
+
+def init_decoder_caches(params, cfg, enc_out, B, S):
+    """Per-layer: self-attn linear cache + per-layer cross K/V from enc_out."""
+    dtype = enc_out.dtype
+    desc = _decoder_descs()[0]
+
+    def one(p_layer):
+        _, ck, cv = attn.qkv_project(p_layer["s0"]["cross"], enc_out, cfg.head_dim, dtype)
+        # note: qkv_project computes q from wq too; the enc-side q is unused
+        # (cheap relative to caching both K and V once per request)
+        base = init_sublayer_cache(cfg, desc, B, S, dtype)
+        return {"s0": dict(base, cross_k=ck, cross_v=cv)}
+
+    return {"blocks": jax.vmap(one)(params["blocks"])}
+
+
+def decoder_forward(params, cfg, tokens, *, mode, caches=None, enc_out=None,
+                    pos_offset=0, moe_groups=1):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B, T = tokens.shape
+    x = layers.embed(params["embed"], tokens, dtype)
+    pos = jnp.asarray(pos_offset) + jnp.arange(T)
+    x = x + params["pos_dec"]["w"].astype(dtype)[pos][None]
+    x = constraint(x, "batch", None, None)
+    desc = _decoder_descs()[0]
+
+    def body(carry, xs):
+        x, po = carry
+        p_layer, cache_layer = xs
+        c = cache_layer["s0"] if cache_layer is not None else None
+        if c is None and enc_out is not None:
+            # train mode: compute cross K/V on the fly
+            _, ck, cv = attn.qkv_project(p_layer["s0"]["cross"], enc_out,
+                                         cfg.head_dim, dtype)
+            c = {"cross_k": ck, "cross_v": cv}
+        y, nc, _ = apply_sublayer(p_layer["s0"], x, desc, cfg, mode=mode,
+                                  pos_offset=po, cache=c,
+                                  moe_groups=moe_groups, dtype=dtype)
+        if nc is not None and cache_layer is not None:
+            out_cache = {"s0": nc}
+        else:
+            out_cache = None
+        return (y, po), out_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    cache_blocks = caches["blocks"] if caches is not None else None
+    (x, _), new_caches = jax.lax.scan(
+        body, (x, jnp.asarray(pos_offset, jnp.int32)), (params["blocks"], cache_blocks))
+    x = _norm_apply(cfg, params["final_norm"], x)
+    out_c = {"blocks": new_caches} if caches is not None else None
+    return x, out_c
+
+
+def encdec_loss(params, cfg, batch, moe_groups=1):
+    """batch: frames (B, S_enc, D), tokens (B, T), labels (B, T)."""
+    from .transformer import chunked_ce_loss
+
+    enc_out = encode(params, cfg, batch["frames"], moe_groups)
+    hidden, _ = decoder_forward(params, cfg, batch["tokens"], mode="train",
+                                enc_out=enc_out, moe_groups=moe_groups)
+    ce = chunked_ce_loss(params, cfg, hidden, batch["labels"], batch.get("mask"))
+    return ce, {"ce": ce, "balance": jnp.zeros((), jnp.float32)}
+
+
+def encdec_prefill(params, cfg, frames, tokens, cache_len=None, moe_groups=1):
+    from .transformer import unembed_matrix
+
+    B, T = tokens.shape
+    enc_out = encode(params, cfg, frames, moe_groups)
+    caches = init_decoder_caches(params, cfg, enc_out, B, cache_len or T)
+    hidden, caches = decoder_forward(params, cfg, tokens, mode="prefill",
+                                     caches=caches, moe_groups=moe_groups)
+    W = unembed_matrix(params, cfg, hidden.dtype)
+    return (hidden[:, -1] @ W).astype(jnp.float32), caches
+
+
+def encdec_decode_step(params, cfg, caches, token, pos, moe_groups=1):
+    from .transformer import unembed_matrix
+
+    hidden, caches = decoder_forward(params, cfg, token, mode="decode",
+                                     caches=caches, pos_offset=pos,
+                                     moe_groups=moe_groups)
+    W = unembed_matrix(params, cfg, hidden.dtype)
+    logits = (hidden[:, -1] @ W).astype(jnp.float32)
+    return constraint(logits, "batch", "model"), caches

@@ -1,0 +1,233 @@
+"""Building-block layers: norms, activations, RoPE/M-RoPE, embeddings
+(including the paper-powered hashed embedding), MLPs.
+
+All modules are functional: `*_init(rng, ...) -> params`, `apply(params, x)`.
+Parameters are plain dicts; sharding comes from path rules
+(parallel/sharding.py), so nothing here mentions the mesh except the
+explicit activation `constraint()` calls in transformer.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constraint
+
+
+def _norm_init(rng, d, scale_offset=0.0):
+    return {"scale": jnp.zeros((d,), jnp.float32) + scale_offset}
+
+
+def rmsnorm_init(rng, d):
+    # gemma convention: scale stored as (1 + w); init w=0 -> scale 1
+    return _norm_init(rng, d)
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"])).astype(dt)
+
+
+def layernorm_init(rng, d):
+    return {"scale": jnp.zeros((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"]) + params["bias"]).astype(dt)
+
+
+def linear_init(rng, d_in, d_out, bias=False, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(params, x, dtype=None):
+    w = params["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+    y = x @ w
+    if "b" in params:
+        b = params["b"]
+        y = y + (b.astype(dtype) if dtype is not None else b)
+    return y
+
+
+def act_fn(name: str):
+    return {"swiglu": None, "gelu": jax.nn.gelu, "silu": jax.nn.silu}.get(name)
+
+
+def mlp_init(rng, d_model, d_ff, act="swiglu", bias=False):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p = {"w_up": linear_init(r1, d_model, d_ff, bias=bias),
+         "w_down": linear_init(r2, d_ff, d_model, bias=bias)}
+    if act == "swiglu":
+        p["w_gate"] = linear_init(r3, d_model, d_ff, bias=bias)
+    return p
+
+
+def mlp(params, x, act="swiglu", dtype=jnp.bfloat16):
+    up = linear(params["w_up"], x, dtype)
+    if act == "swiglu":
+        gate = jax.nn.silu(linear(params["w_gate"], x, dtype))
+        h = gate * up
+    else:
+        h = act_fn(act)(up)
+    # context-parallel: hidden stays T-sharded over 'model' (weights are
+    # gathered FSDP-style); F-sharding here would force (B,T,D) activation
+    # gathers around every MLP (perf it3). Decode (T=1) skips the seq axis.
+    from ..parallel.sharding import seq_axis
+
+    h = constraint(h, "batch", seq_axis(h.shape[1]), None)
+    return linear(params["w_down"], h, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float):
+    """Half-dim inverse frequencies (d_head//2,)."""
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., T, H, d_head); positions: broadcastable to (..., T)."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., T, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, sections=(16, 24, 24), theta=10000.0):
+    """Qwen2-VL M-RoPE: the d_head/2 frequency slots are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream. positions_thw: (3, ..., T). For text tokens all three streams
+    are equal, reducing to standard RoPE.
+    """
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))  # (d/2,)
+    sec = np.asarray(sections)
+    assert sec.sum() == d // 2, (sections, d)
+    sec_id = np.repeat(np.arange(3), sec)  # (d/2,) which stream each slot uses
+    pos = positions_thw[sec_id]  # (d/2, ..., T) via fancy index on axis 0
+    pos = jnp.moveaxis(pos, 0, -1)  # (..., T, d/2)
+    ang = pos.astype(jnp.float32) * inv
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(T: int, d: int):
+    pos = np.arange(T)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / (10000 ** (dim / d))
+    out = np.zeros((T, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_init(rng, vocab, d_model):
+    return {"tok": {"w": jax.random.normal(rng, (vocab, d_model), jnp.float32) * 0.02}}
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _embed_lookup(vd, w, tokens):
+    return w[tokens]
+
+
+def _embed_lookup_fwd(vd, w, tokens):
+    return w[tokens], tokens
+
+
+def _embed_lookup_bwd(vd, tokens, g):
+    """Sharding-annotated scatter-add: without the constraints GSPMD
+    materializes the (V, D) embedding gradient REPLICATED per device
+    (observed: 1.7 GiB f32 x many on yi-34b). Constraining the zeros
+    operand and the result keeps the scatter vocab/model x d_model/data
+    sharded end to end. Accumulate in f32 (bf16 scatter-add over millions
+    of tokens loses bits), round once at the end."""
+    V, D, dtype = vd
+    zeros = constraint(jnp.zeros((V, D), jnp.float32), "model", "data")
+    dw = zeros.at[tokens].add(g.astype(jnp.float32))
+    dw = constraint(dw, "model", "data")
+    return dw.astype(dtype), None
+
+
+_embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def embed(params, tokens, dtype=jnp.bfloat16):
+    w = params["tok"]["w"].astype(dtype)
+    return _embed_lookup((w.shape[0], w.shape[1], str(w.dtype)), w, tokens)
+
+
+def hashed_embedding_init(rng, vocab, d_model, n_buckets, n_hashes=2):
+    """The paper's technique at the model layer: the 'hashing trick'.
+
+    Instead of a (vocab, d) table, keep a (n_buckets, d) table addressed by
+    `n_hashes` independent MULTILINEAR hashes of the token id, plus a small
+    (vocab, n_hashes) learned mixing weight (Svenstrup et al. hash
+    embeddings). Strong universality gives provable collision bounds: any
+    two token ids share bucket j with probability exactly 1/n_buckets.
+
+    Token-id hashing uses the limb kernel path in-graph: ids are strings of
+    length 1 (32-bit char), so h(t) = (m1 + m2*t mod 2^64) >> 32.
+    """
+    r1, r2 = jax.random.split(rng)
+    from ..core.keys import KeyBuffer
+
+    kb = KeyBuffer(seed=0xE64B + n_hashes)
+    keys = kb.u64(2 * n_hashes + 2)
+    k_hi = jnp.asarray((keys >> np.uint64(32)).astype(np.uint32))
+    k_lo = jnp.asarray((keys & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    return {
+        "hashed": {"w": jax.random.normal(r1, (n_buckets, d_model), jnp.float32) * 0.02},
+        "mix": {"w": jax.random.normal(r2, (vocab, n_hashes), jnp.float32) * 0.5},
+        # constants (non-trainable): filtered out of optimizer by path
+        "const_key_hi": k_hi,
+        "const_key_lo": k_lo,
+    }
+
+
+def hashed_embed(params, tokens, n_buckets, n_hashes=2, dtype=jnp.bfloat16):
+    from ..core import limbs
+
+    tok_u = tokens.astype(jnp.uint32)
+    vecs = []
+    mix = params["mix"]["w"].astype(dtype)[tokens]  # (..., n_hashes)
+    for h in range(n_hashes):
+        m1 = (params["const_key_hi"][2 * h], params["const_key_lo"][2 * h])
+        m2 = (params["const_key_hi"][2 * h + 1], params["const_key_lo"][2 * h + 1])
+        p_hi, p_lo = limbs.mul64_u32((m2[0], m2[1]), tok_u)
+        s_hi, _s_lo = limbs.add64((p_hi, p_lo), (jnp.broadcast_to(m1[0], p_hi.shape),
+                                                 jnp.broadcast_to(m1[1], p_lo.shape)))
+        bucket = (s_hi % jnp.uint32(n_buckets)).astype(jnp.int32)
+        vecs.append(params["hashed"]["w"].astype(dtype)[bucket])
+    stacked = jnp.stack(vecs, axis=-1)  # (..., d, n_hashes)
+    return jnp.einsum("...dh,...h->...d", stacked, mix)

@@ -1,0 +1,120 @@
+"""Uniform per-arch API: build(cfg) -> ModelAPI with init / loss / prefill /
+decode_step / input_specs. The launchers, trainer, server, and dry-run all
+go through this; `--arch <id>` resolves configs.get_config and then build().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ArchConfig, ShapeSpec
+from . import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable                  # (rng) -> params
+    loss: Callable                  # (params, batch, moe_groups) -> (loss, metrics)
+    prefill: Callable               # (params, batch, cache_len, moe_groups) -> (logits, caches)
+    decode_step: Callable           # (params, caches, token, pos, moe_groups) -> (logits, caches)
+    init_caches: Callable           # (B, S) -> caches
+    input_specs: Callable           # (ShapeSpec) -> dict name->ShapeDtypeStruct
+
+
+def build(cfg: ArchConfig) -> ModelAPI:
+    if cfg.encdec:
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+def _batch_specs_lm(cfg, shape: ShapeSpec):
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, T), i32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+        }
+        if cfg.vision_prefix:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_prefix, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+        if cfg.vision_prefix:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_prefix, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def _build_lm(cfg: ArchConfig) -> ModelAPI:
+    def init(rng):
+        return transformer.init_lm(rng, cfg)
+
+    def loss(params, batch, moe_groups=1):
+        return transformer.lm_loss(params, cfg, batch, moe_groups=moe_groups)
+
+    def prefill(params, batch, cache_len=None, moe_groups=1):
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   cache_len=cache_len, moe_groups=moe_groups,
+                                   patch_embeds=batch.get("patch_embeds"))
+
+    def decode_step(params, caches, token, pos, moe_groups=1):
+        return transformer.decode_step(params, cfg, caches, token, pos,
+                                       moe_groups=moe_groups)
+
+    def init_caches(B, S):
+        return transformer.init_caches(cfg, B, S)
+
+    def input_specs(shape: ShapeSpec):
+        return _batch_specs_lm(cfg, shape)
+
+    return ModelAPI(cfg, init, loss, prefill, decode_step, init_caches, input_specs)
+
+
+def _build_encdec(cfg: ArchConfig) -> ModelAPI:
+    def init(rng):
+        return encdec.init_encdec(rng, cfg)
+
+    def loss(params, batch, moe_groups=1):
+        return encdec.encdec_loss(params, cfg, batch, moe_groups=moe_groups)
+
+    def prefill(params, batch, cache_len=None, moe_groups=1):
+        return encdec.encdec_prefill(params, cfg, batch["frames"], batch["tokens"],
+                                     cache_len=cache_len, moe_groups=moe_groups)
+
+    def decode_step(params, caches, token, pos, moe_groups=1):
+        return encdec.encdec_decode_step(params, cfg, caches, token, pos,
+                                         moe_groups=moe_groups)
+
+    def init_caches(B, S):
+        raise NotImplementedError("enc-dec caches require enc_out; use prefill")
+
+    def input_specs(shape: ShapeSpec):
+        B, T = shape.global_batch, shape.seq_len
+        frames = jax.ShapeDtypeStruct((B, cfg.encoder_positions, cfg.d_model),
+                                      jnp.bfloat16)
+        if shape.kind == "train":
+            return {
+                "frames": frames,
+                "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, T), jnp.int32),
+            }
+        if shape.kind == "prefill":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+        return {
+            "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    return ModelAPI(cfg, init, loss, prefill, decode_step, init_caches, input_specs)

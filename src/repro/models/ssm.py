@@ -1,0 +1,293 @@
+"""State-space / linear-attention layers: Mamba (S6) and RWKV-6 (Finch).
+
+Both are *chunked*: the sequence is processed in fixed-size chunks with an
+O(1)-per-chunk carried state, so
+  - training memory is (chunk x state) not (T x state);
+  - the same code path gives O(1) decode steps (chunk of 1);
+  - long_500k decode carries only the state (the whole point of assigning
+    these archs to that shape).
+
+Mamba within-chunk uses jax.lax.associative_scan on the (a, b) linear
+recurrence h_t = a_t h_{t-1} + b_t. RWKV-6 within-chunk uses the pairwise
+log-decay form with small chunks (16) so exp(b_t - b_s) stays in fp32 range
+(decays are clamped); cross-chunk state decays by the chunk's total decay.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constraint
+from . import layers
+
+# ---------------------------------------------------------------------------
+# Mamba (S6)
+# ---------------------------------------------------------------------------
+
+def mamba_init(rng, d_model, d_state=16, expand=2, d_conv=4, dt_rank=None):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or -(-d_model // 16)
+    r = jax.random.split(rng, 6)
+    s = 1.0 / math.sqrt(d_model)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (d_inner, 1))
+    return {
+        "in_proj": {"w": jax.random.normal(r[0], (d_model, 2 * d_inner), jnp.float32) * s},
+        "conv": {"w": jax.random.normal(r[1], (d_inner, d_conv), jnp.float32) * 0.2},
+        "x_proj": {"w": jax.random.normal(r[2], (d_inner, dt_rank + 2 * d_state), jnp.float32)
+                   * (1.0 / math.sqrt(d_inner))},
+        "dt_proj": {"w": jax.random.normal(r[3], (dt_rank, d_inner), jnp.float32)
+                    * (1.0 / math.sqrt(dt_rank))},
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_inner,), 0.01, jnp.float32))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": {"w": jax.random.normal(r[4], (d_inner, d_model), jnp.float32)
+                     * (1.0 / math.sqrt(d_inner))},
+    }
+
+
+def _mamba_scan_chunked(dt, xc, Bs, Cs, A, h0, chunk):
+    """Selective-scan over T in chunks, DISCRETIZING inside the chunk step.
+
+    dt, xc: (B, T, DI) f32; Bs, Cs: (B, T, N) f32; A: (DI, N); h0 (B,DI,N).
+    Returns (ys (B, T, DI), hT).
+
+    Memory discipline (perf it8): neither the state sequence hs NOR the
+    discretized dA/dBx (B, T, DI, N) tensors are ever materialized at full
+    length -- both exist only per (chunk, B, DI, N) tile inside the remat'd
+    step. jamba train per-device activations dropped 200+ -> ~30 GiB
+    (CPU-measured, f32-inflated) with this.
+    """
+    B, T, DI = dt.shape
+    N = A.shape[-1]
+    nc = T // chunk
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    def chunk_step(h, xs):
+        dt_c, xc_c, b_c, c_c = xs  # (chunk, B, DI), (chunk, B, DI), (chunk, B, N) x2
+        dA = jnp.exp(dt_c[..., None] * A[None, None])             # (chunk,B,DI,N)
+        dBx = (dt_c * xc_c)[..., None] * b_c[:, :, None, :]
+        ahat, bhat = jax.lax.associative_scan(combine, (dA, dBx), axis=0)
+        hs = ahat * h[None] + bhat
+        ys = jnp.einsum("tbdn,tbn->tbd", hs, c_c)
+        return hs[-1], ys
+
+    chunk_step = jax.checkpoint(chunk_step,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+    dt_cs = jnp.moveaxis(dt.reshape(B, nc, chunk, DI), 1, 0).swapaxes(1, 2)
+    xc_cs = jnp.moveaxis(xc.reshape(B, nc, chunk, DI), 1, 0).swapaxes(1, 2)
+    b_cs = jnp.moveaxis(Bs.reshape(B, nc, chunk, N), 1, 0).swapaxes(1, 2)
+    c_cs = jnp.moveaxis(Cs.reshape(B, nc, chunk, N), 1, 0).swapaxes(1, 2)
+    hT, ys = jax.lax.scan(chunk_step, h0, (dt_cs, xc_cs, b_cs, c_cs))
+    # ys: (nc, chunk, B, DI) -> (B, T, DI)
+    ys = ys.transpose(2, 0, 1, 3).reshape(B, T, DI)
+    return ys, hT
+
+
+def mamba_forward(params, x, *, d_state=16, chunk=64, conv_state=None, ssm_state=None,
+                  dtype=jnp.bfloat16, return_state=False):
+    """x: (B, T, D). Optional incoming states (decode / chunked prefill):
+    conv_state (B, d_conv-1, DI), ssm_state (B, DI, N) f32."""
+    B, T, D = x.shape
+    d_conv = params["conv"]["w"].shape[1]
+    xz = layers.linear(params["in_proj"], x, dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    DI = xin.shape[-1]
+    xin = constraint(xin, "batch", None, "model")
+
+    # causal depthwise conv over T with carried tail
+    if conv_state is None:
+        conv_state = jnp.zeros((B, d_conv - 1, DI), dtype)
+    xin_ext = jnp.concatenate([conv_state, xin], axis=1)
+    new_conv_state = xin_ext[:, -(d_conv - 1):, :] if d_conv > 1 else conv_state
+    w = params["conv"]["w"].astype(dtype)  # (DI, k)
+    xc = sum(xin_ext[:, i : i + T, :] * w[:, i] for i in range(d_conv))
+    xc = jax.nn.silu(xc)
+
+    proj = layers.linear(params["x_proj"], xc, dtype)
+    dt_rank = proj.shape[-1] - 2 * d_state
+    dt, Bs, Cs = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        layers.linear(params["dt_proj"], dt, dtype).astype(jnp.float32)
+        + params["dt_bias"]
+    )  # (B, T, DI) f32
+    A = -jnp.exp(params["A_log"])  # (DI, N)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, DI, d_state), jnp.float32)
+    if T == 1:  # decode fast path (single-step discretization)
+        dA1 = jnp.exp(dt[:, 0, :, None] * A[None])
+        dBx1 = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+            * Bs[:, 0].astype(jnp.float32)[:, None, :]
+        hT = dA1 * ssm_state + dBx1
+        y = jnp.einsum("bdn,bn->bd", hT, Cs[:, 0].astype(jnp.float32))[:, None]
+    else:
+        pad = (-T) % chunk
+        dt_f = dt
+        xc_f = xc.astype(jnp.float32)
+        Bs_f = Bs.astype(jnp.float32)
+        Cs_f = Cs.astype(jnp.float32)
+        if pad:
+            # dt=0 padding -> dA=exp(0)=1, dBx=0: identity steps, so the
+            # carried state after padding equals the last REAL state
+            widths3 = ((0, 0), (0, pad), (0, 0))
+            dt_f = jnp.pad(dt_f, widths3)
+            xc_f = jnp.pad(xc_f, widths3)
+            Bs_f = jnp.pad(Bs_f, widths3)
+            Cs_f = jnp.pad(Cs_f, widths3)
+        y, hT = _mamba_scan_chunked(dt_f, xc_f, Bs_f, Cs_f, A, ssm_state,
+                                    min(chunk, dt_f.shape[1]))
+        y = y[:, :T]
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(dtype)) * jax.nn.silu(z)
+    out = layers.linear(params["out_proj"], y, dtype)
+    if return_state:
+        return out, (new_conv_state, hT)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent per-channel decay linear attention
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(rng, d_model, n_heads, d_ff, decay_lora=64):
+    dk = d_model // n_heads
+    r = jax.random.split(rng, 10)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "mix": jax.random.uniform(r[0], (5, d_model), jnp.float32),  # r,k,v,g,w shifts
+        "w_r": {"w": jax.random.normal(r[1], (d_model, d_model), jnp.float32) * s},
+        "w_k": {"w": jax.random.normal(r[2], (d_model, d_model), jnp.float32) * s},
+        "w_v": {"w": jax.random.normal(r[3], (d_model, d_model), jnp.float32) * s},
+        "w_g": {"w": jax.random.normal(r[4], (d_model, d_model), jnp.float32) * s},
+        # data-dependent decay: low-rank adapter (Finch)
+        "w_decay_a": {"w": jax.random.normal(r[5], (d_model, decay_lora), jnp.float32) * s},
+        "w_decay_b": {"w": jax.random.normal(r[6], (decay_lora, d_model), jnp.float32)
+                      * (1.0 / math.sqrt(decay_lora))},
+        "decay": jnp.full((d_model,), -6.0, jnp.float32),  # base log-log decay
+        "bonus": jax.random.normal(r[7], (n_heads, dk), jnp.float32) * 0.1,
+        "w_o": {"w": jax.random.normal(r[8], (d_model, d_model), jnp.float32) * s},
+    }
+
+
+def _token_shift(x, mix, shift_state=None):
+    """RWKV token shift: lerp(x, x_{t-1}, mix). shift_state: (B, D) last x."""
+    if shift_state is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    return x + mix * (prev - x), x[:, -1]
+
+
+def rwkv6_time_mix(params, x, n_heads, *, chunk=16, state=None, shift_state=None,
+                   dtype=jnp.bfloat16, return_state=False):
+    """x: (B, T, D) -> (B, T, D). state: (B, H, dk, dv) f32 carried."""
+    B, T, D = x.shape
+    H = n_heads
+    dk = D // H
+    mix = params["mix"]
+    xr, last = _token_shift(x, mix[0].astype(dtype), shift_state)
+    xk, _ = _token_shift(x, mix[1].astype(dtype), shift_state)
+    xv, _ = _token_shift(x, mix[2].astype(dtype), shift_state)
+    xg, _ = _token_shift(x, mix[3].astype(dtype), shift_state)
+    xw, _ = _token_shift(x, mix[4].astype(dtype), shift_state)
+
+    r = layers.linear(params["w_r"], xr, dtype).reshape(B, T, H, dk)
+    k = layers.linear(params["w_k"], xk, dtype).reshape(B, T, H, dk)
+    v = layers.linear(params["w_v"], xv, dtype).reshape(B, T, H, dk)
+    g = jax.nn.silu(layers.linear(params["w_g"], xg, dtype))
+    # data-dependent log decay (clamped for fp32 chunk math)
+    ww = params["decay"] + layers.linear(
+        params["w_decay_b"],
+        jnp.tanh(layers.linear(params["w_decay_a"], xw, dtype)), dtype
+    ).astype(jnp.float32)
+    log_w = -jnp.exp(jnp.clip(ww, -8.0, 1.0))          # (B,T,D) in [-e, -3e-4]
+    log_w = jnp.clip(log_w, -10.0, -1e-4).reshape(B, T, H, dk)
+    u = params["bonus"]  # (H, dk)
+
+    if state is None:
+        state = jnp.zeros((B, H, dk, dk), jnp.float32)
+
+    if T == 1:  # decode fast path: out = r.(state + u k v^T); state = w*state + k v^T
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32))
+        out = jnp.einsum("bhk,bhkv->bhv", r[:, 0].astype(jnp.float32),
+                         state + u[None, :, :, None] * kv)
+        new_state = jnp.exp(log_w[:, 0])[..., None] * state + kv
+        y = out.reshape(B, 1, D)
+    else:
+        pad = (-T) % chunk
+        if pad:
+            r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Tp = r.shape[1]
+        nc = Tp // chunk
+
+        def reshape_c(a):
+            return a.reshape(B, nc, chunk, H, dk).transpose(1, 0, 2, 3, 4)
+
+        rc, kc, vc, wc = map(reshape_c, (r.astype(jnp.float32), k.astype(jnp.float32),
+                                         v.astype(jnp.float32), log_w))
+
+        def chunk_step(S, xs):
+            rr, kk, vv, lw = xs  # (B, C, H, dk)
+            b = jnp.cumsum(lw, axis=1)              # (B,C,H,dk) cumulative log decay
+            b_prev = b - lw                          # decay up to t-1
+            # inter-chunk: r_t . (decay(0..t-1) * S)
+            out_state = jnp.einsum("bthk,bhkv->bthv", rr * jnp.exp(b_prev), S)
+            # intra-chunk: pairwise E[t,s,d] = exp(b_{t-1} - b_s), s < t.
+            # Mask BEFORE exp: for s >= t the exponent is positive and would
+            # overflow f32 (inf * 0 = NaN after the tril multiply).
+            expo = b_prev[:, :, None] - b[:, None, :, :, :]  # (B,C,C,H,dk)
+            tri = np.tril(np.ones((chunk, chunk), np.float32), k=-1)
+            expo = jnp.where(tri[None, :, :, None, None] > 0, expo, -jnp.inf)
+            A = jnp.einsum("bthk,bshk,btshk->btsh", rr, kk, jnp.exp(expo))
+            # diagonal: bonus u
+            diag = jnp.einsum("bthk,bthk->bth", rr * u[None, None], kk)
+            out_intra = jnp.einsum("btsh,bshv->bthv", A, vv) + diag[..., None] * vv
+            # state update: S' = decay(all) * S + sum_s decay(s+1..C) k_s v_s^T
+            b_last = b[:, -1]  # (B,H,dk)
+            k_dec = kk * jnp.exp(b_last[:, None] - b)
+            S_new = jnp.exp(b_last)[..., None] * S + jnp.einsum("bshk,bshv->bhkv", k_dec, vv)
+            return S_new, out_state + out_intra
+
+        new_state, outs = jax.lax.scan(chunk_step, state, (rc, kc, vc, wc))
+        y = outs.transpose(1, 0, 2, 3, 4).reshape(B, Tp, D)[:, :T]
+
+    y = y.astype(dtype) * g
+    out = layers.linear(params["w_o"], y, dtype)
+    if return_state:
+        return out, (new_state, last)
+    return out
+
+
+def rwkv6_channel_mix_init(rng, d_model, d_ff):
+    r = jax.random.split(rng, 3)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "mix": jax.random.uniform(r[0], (2, d_model), jnp.float32),
+        "ffn_k": {"w": jax.random.normal(r[1], (d_model, d_ff), jnp.float32) * s},
+        "ffn_v": {"w": jax.random.normal(r[2], (d_ff, d_model), jnp.float32)
+                  * (1.0 / math.sqrt(d_ff))},
+        "ffn_r": {"w": jax.random.normal(r[0], (d_model, d_model), jnp.float32) * s},
+    }
+
+
+def rwkv6_channel_mix(params, x, *, shift_state=None, dtype=jnp.bfloat16,
+                      return_state=False):
+    xk, last = _token_shift(x, params["mix"][0].astype(dtype), shift_state)
+    xr, _ = _token_shift(x, params["mix"][1].astype(dtype), shift_state)
+    k = jnp.square(jax.nn.relu(layers.linear(params["ffn_k"], xk, dtype)))
+    k = constraint(k, "batch", None, "model")
+    kv = layers.linear(params["ffn_v"], k, dtype)
+    out = jax.nn.sigmoid(layers.linear(params["ffn_r"], xr, dtype)) * kv
+    if return_state:
+        return out, last
+    return out

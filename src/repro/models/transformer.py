@@ -1,0 +1,479 @@
+"""LM assembly: block-structured scan-over-layers supporting every assigned
+family with ONE code path.
+
+An architecture is a sequence of homogeneous *blocks* (scanned, remat'd)
+plus an optional unrolled *tail*; each block unrolls a short list of
+sublayer descriptors (attention / mamba / rwkv, each with dense/MoE FFN).
+This handles:
+  dense (yi, mistral, phi3, qwen2-vl) .... L blocks x [attn+dense]
+  gemma3 (5:1 local:global) .............. 10 blocks x [5 local, 1 global] + 2 tail
+  llama4 / granite (MoE) ................. L blocks x [attn+moe]
+  jamba (1:7 attn:mamba, MoE every 2nd) .. 4 blocks x [8 sublayers]
+  rwkv6 .................................. L blocks x [time_mix+channel_mix]
+(whisper enc-dec lives in encdec.py on top of the same sublayers.)
+
+Scan-over-blocks keeps the HLO small (one block body), remat-per-block keeps
+activation memory at (n_blocks x residual), and the per-block cache pytrees
+give every sublayer exactly the cache it needs (ring for sliding windows,
+linear/SP-sharded for global attention, states for SSM) -- that layout is
+what makes gemma3/jamba long_500k feasible (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constraint
+from . import attention as attn
+from . import layers, moe as moe_mod, ssm
+
+
+@dataclasses.dataclass(frozen=True)
+class SubDesc:
+    kind: str                 # attn | mamba | rwkv
+    causal: bool = True
+    window: Optional[int] = None
+    theta: float = 1e4
+    ffn: Optional[str] = "dense"   # dense | moe | None (rwkv has its own)
+    cross: bool = False            # whisper decoder cross-attention
+
+
+def block_spec(cfg):
+    """-> (n_blocks, [SubDesc] per block, [SubDesc] tail)."""
+    if cfg.family == "hybrid":  # jamba
+        per = cfg.attn_every
+        subs = []
+        for i in range(per):
+            kind = "attn" if i % per == cfg.attn_offset else "mamba"
+            ffn = "moe" if (cfg.moe and i % cfg.moe_every == cfg.moe_offset) else "dense"
+            subs.append(SubDesc(kind=kind, ffn=ffn, theta=cfg.rope_theta))
+        assert cfg.n_layers % per == 0
+        return cfg.n_layers // per, subs, []
+    if cfg.ssm_type == "rwkv6":
+        return cfg.n_layers, [SubDesc(kind="rwkv", ffn=None)], []
+    if cfg.attention == "sliding_global":
+        per = cfg.global_every
+        subs = [
+            SubDesc(kind="attn", window=cfg.sliding_window, theta=cfg.rope_theta,
+                    ffn="moe" if cfg.moe else "dense")
+            for _ in range(per - 1)
+        ] + [SubDesc(kind="attn", window=None, theta=cfg.rope_theta_global,
+                     ffn="moe" if cfg.moe else "dense")]
+        n_blocks = cfg.n_layers // per
+        n_tail = cfg.n_layers - n_blocks * per
+        tail = [dataclasses.replace(subs[i]) for i in range(n_tail)]
+        return n_blocks, subs, tail
+    if cfg.moe and cfg.moe_every > 1:  # interleaved MoE (llama4-style)
+        per = cfg.moe_every
+        subs = [SubDesc(kind="attn",
+                        ffn="moe" if i % per == cfg.moe_offset else "dense",
+                        theta=cfg.rope_theta)
+                for i in range(per)]
+        assert cfg.n_layers % per == 0
+        return cfg.n_layers // per, subs, []
+    ffn = "moe" if cfg.moe else "dense"
+    return cfg.n_layers, [SubDesc(kind="attn", ffn=ffn, theta=cfg.rope_theta)], []
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg, rng):
+    return layers.rmsnorm_init(rng, cfg.d_model) if cfg.norm == "rmsnorm" \
+        else layers.layernorm_init(rng, cfg.d_model)
+
+
+def _norm_apply(cfg, p, x):
+    return layers.rmsnorm(p, x, cfg.norm_eps) if cfg.norm == "rmsnorm" \
+        else layers.layernorm(p, x, cfg.norm_eps)
+
+
+def init_sublayer(rng, cfg, desc: SubDesc):
+    r = jax.random.split(rng, 6)
+    p = {"ln1": _norm_init(cfg, r[0])}
+    if desc.kind == "attn":
+        p["attn"] = attn.attention_init(
+            r[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            bias=cfg.attn_bias)
+        if desc.cross:
+            p["cross_ln"] = _norm_init(cfg, r[4])
+            p["cross"] = attn.attention_init(
+                r[5], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                bias=cfg.attn_bias)
+    elif desc.kind == "mamba":
+        p["mamba"] = ssm.mamba_init(r[1], cfg.d_model, d_state=cfg.d_state,
+                                    expand=cfg.ssm_expand)
+    elif desc.kind == "rwkv":
+        p["rwkv"] = ssm.rwkv6_init(r[1], cfg.d_model, cfg.n_heads, cfg.d_ff)
+        p["ln2"] = _norm_init(cfg, r[2])
+        p["rwkv_cm"] = ssm.rwkv6_channel_mix_init(r[3], cfg.d_model, cfg.d_ff)
+        return p
+    if desc.ffn == "dense":
+        p["ln2"] = _norm_init(cfg, r[2])
+        p["mlp"] = layers.mlp_init(r[3], cfg.d_model, cfg.d_ff, act=cfg.act,
+                                   bias=cfg.mlp_bias)
+    elif desc.ffn == "moe":
+        p["ln2"] = _norm_init(cfg, r[2])
+        p["moe"] = moe_mod.moe_init(
+            r[3], cfg.d_model, cfg.d_ff, cfg.n_experts,
+            router=cfg.router, shared_expert=cfg.shared_expert, act=cfg.act)
+    return p
+
+
+def init_block(rng, cfg, subs):
+    rs = jax.random.split(rng, len(subs))
+    return {f"s{i}": init_sublayer(rs[i], cfg, d) for i, d in enumerate(subs)}
+
+
+def init_lm(rng, cfg):
+    n_blocks, subs, tail = block_spec(cfg)
+    r_emb, r_blocks, r_tail, r_fin, r_head = jax.random.split(rng, 5)
+    params = {}
+    if cfg.hashed_embedding:
+        params["embed"] = layers.hashed_embedding_init(
+            r_emb, cfg.vocab_size, cfg.d_model,
+            cfg.vocab_size // cfg.hashed_vocab_factor, cfg.hashed_n_hashes)
+    else:
+        params["embed"] = layers.embedding_init(r_emb, cfg.vocab_size, cfg.d_model)
+    block_rngs = jax.random.split(r_blocks, n_blocks)
+    params["blocks"] = jax.vmap(lambda k: init_block(k, cfg, subs))(block_rngs)
+    if tail:
+        params["tail"] = init_block(r_tail, cfg, tail)
+    params["final_norm"] = _norm_init(cfg, r_fin)
+    if not cfg.tie_embeddings or cfg.hashed_embedding:
+        params["lm_head"] = {"w": jax.random.normal(
+            r_head, (cfg.d_model, cfg.vocab_size), jnp.float32) / math.sqrt(cfg.d_model)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens, dtype):
+    if cfg.hashed_embedding:
+        x = layers.hashed_embed(params["embed"], tokens,
+                                cfg.vocab_size // cfg.hashed_vocab_factor,
+                                cfg.hashed_n_hashes, dtype)
+    else:
+        x = layers.embed(params["embed"], tokens, dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def unembed_matrix(params, cfg, dtype):
+    """(D, V) projection for logits."""
+    if "lm_head" in params:
+        return params["lm_head"]["w"].astype(dtype)
+    return params["embed"]["tok"]["w"].astype(dtype).T
+
+
+# ---------------------------------------------------------------------------
+# sublayer application (train / prefill / decode share this body)
+# ---------------------------------------------------------------------------
+
+def _positions_for(cfg, B, T, offset, vision_prefix=0):
+    pos = offset + jnp.arange(T)
+    if cfg.pos_kind == "mrope":
+        # text stream: t=h=w=pos ; vision prefix: t=0, (h, w) on a grid
+        side = max(1, int(math.sqrt(max(vision_prefix, 1))))
+        t = jnp.where(pos < vision_prefix, 0, pos)
+        h = jnp.where(pos < vision_prefix, pos // side, pos)
+        w = jnp.where(pos < vision_prefix, pos % side, pos)
+        return jnp.stack([t, h, w])  # (3, T)
+    return pos  # (T,)
+
+
+def _apply_rope_q_or_k(cfg, x, positions, theta):
+    if cfg.pos_kind == "mrope":
+        return layers.apply_mrope(x, positions, cfg.mrope_sections, theta)
+    if cfg.pos_kind in ("rope",):
+        return layers.apply_rope(x, positions, theta)
+    return x  # learned/sinusoidal handled at embedding; 'none' for ssm
+
+
+def _qk_norm(cfg, q, k):
+    if not cfg.qk_norm:
+        return q, k
+    def _n(t):
+        f = t.astype(jnp.float32)
+        return (f * jax.lax.rsqrt(jnp.mean(f * f, -1, keepdims=True) + 1e-6)).astype(t.dtype)
+    return _n(q), _n(k)
+
+
+def apply_sublayer(p, x, desc: SubDesc, cfg, *, mode, pos_offset=0, cache=None,
+                   enc_out=None, token_ids=None, moe_groups=1, dtype=jnp.bfloat16):
+    """x: (B, T, D). mode: 'train' | 'prefill' | 'decode'.
+    Returns (x, new_cache, aux_loss)."""
+    B, T, D = x.shape
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    h = _norm_apply(cfg, p["ln1"], x)
+    if desc.kind == "attn":
+        q, k, v = attn.qkv_project(p["attn"], h, cfg.head_dim, dtype)
+        positions = _positions_for(cfg, B, T, pos_offset, cfg.vision_prefix if mode != "decode" else 0)
+        q = _apply_rope_q_or_k(cfg, q, positions, desc.theta)
+        k = _apply_rope_q_or_k(cfg, k, positions, desc.theta)
+        q, k = _qk_norm(cfg, q, k)
+        if mode == "decode":
+            new_cache = attn.cache_insert(cache, k, v, pos_offset)
+            o = attn.decode_attend(new_cache, q, pos_offset, window=desc.window)
+        else:
+            o = attn.flash_attention(
+                q, k, v, causal=desc.causal, window=desc.window,
+                chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k,
+                causal_skip=cfg.causal_skip and desc.window is None)
+            if mode == "prefill" and cache is not None:
+                if attn.is_ring(cache):
+                    new_cache = attn.ring_prefill(cache, k, v, T)
+                else:
+                    new_cache = attn.linear_prefill(cache, k, v, T)
+        o = constraint(attn.out_project(p["attn"], o, dtype), "batch", None, None)
+        x = x + o
+        if desc.cross:
+            hc = _norm_apply(cfg, p["cross_ln"], x)
+            qc, _, _ = attn.qkv_project(p["cross"], hc, cfg.head_dim, dtype)
+            kc, vc = cache["cross_k"], cache["cross_v"]
+            oc = attn.flash_attention(qc, kc, vc, causal=False,
+                                      chunk_q=cfg.attn_chunk_q, chunk_k=cfg.attn_chunk_k)
+            x = x + attn.out_project(p["cross"], oc, dtype)
+    elif desc.kind == "mamba":
+        conv_s = cache["conv"] if cache is not None else None
+        ssm_s = cache["ssm"] if cache is not None else None
+        o, (conv_s2, ssm_s2) = ssm.mamba_forward(
+            p["mamba"], h, d_state=cfg.d_state, chunk=cfg.ssm_chunk,
+            conv_state=conv_s, ssm_state=ssm_s, dtype=dtype, return_state=True)
+        if cache is not None:
+            new_cache = dict(cache, conv=conv_s2, ssm=ssm_s2)
+        x = x + constraint(o, "batch", None, None)
+    elif desc.kind == "rwkv":
+        st = cache["wkv"] if cache is not None else None
+        sh = cache["shift_tm"] if cache is not None else None
+        o, (st2, sh2) = ssm.rwkv6_time_mix(
+            p["rwkv"], h, cfg.n_heads, chunk=cfg.rwkv_chunk, state=st,
+            shift_state=sh, dtype=dtype, return_state=True)
+        x = x + o
+        h2 = _norm_apply(cfg, p["ln2"], x)
+        sh_cm = cache["shift_cm"] if cache is not None else None
+        o2, sh_cm2 = ssm.rwkv6_channel_mix(p["rwkv_cm"], h2, shift_state=sh_cm,
+                                           dtype=dtype, return_state=True)
+        x = x + o2
+        if cache is not None:
+            new_cache = dict(cache, wkv=st2, shift_tm=sh2, shift_cm=sh_cm2)
+        return x, new_cache, aux
+
+    if desc.ffn == "dense":
+        h = _norm_apply(cfg, p["ln2"], x)
+        x = x + layers.mlp(p["mlp"], h, act=cfg.act, dtype=dtype)
+    elif desc.ffn == "moe":
+        h = _norm_apply(cfg, p["ln2"], x)
+        o, moe_aux = moe_mod.moe_apply(
+            p["moe"], h, n_experts=cfg.n_experts, k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor, groups=moe_groups,
+            router=cfg.router, token_ids=token_ids, act=cfg.act, dtype=dtype)
+        aux = aux + moe_aux["balance_loss"]
+        x = x + o
+    from ..parallel.sharding import seq_axis
+
+    seq_sh = seq_axis(x.shape[1]) if cfg.seq_shard_activations else None
+    return constraint(x, "batch", seq_sh, None), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_sublayer_cache(cfg, desc: SubDesc, B, S, dtype=jnp.bfloat16, sp_shard=False):
+    if desc.kind == "attn":
+        if desc.window is not None and S > desc.window:
+            return attn.make_ring_cache(B, desc.window, cfg.n_kv_heads, cfg.head_dim, dtype)
+        return attn.make_linear_cache(B, S, cfg.n_kv_heads, cfg.head_dim, dtype,
+                                      sp_shard=sp_shard and S > 65536)
+    if desc.kind == "mamba":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        d_conv = 4
+        return {
+            "conv": jnp.zeros((B, d_conv - 1, d_inner), dtype),
+            "ssm": constraint(jnp.zeros((B, d_inner, cfg.d_state), jnp.float32),
+                              None, "model", None),
+        }
+    if desc.kind == "rwkv":
+        dk = cfg.d_model // cfg.n_heads
+        return {
+            "wkv": constraint(jnp.zeros((B, cfg.n_heads, dk, dk), jnp.float32),
+                              None, "model", None, None),
+            "shift_tm": jnp.zeros((B, cfg.d_model), dtype),
+            "shift_cm": jnp.zeros((B, cfg.d_model), dtype),
+        }
+    raise ValueError(desc.kind)
+
+
+def init_caches(cfg, B, S, dtype=None):
+    """Stacked cache pytree matching the block structure."""
+    dtype = dtype or (jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    n_blocks, subs, tail = block_spec(cfg)
+    sp = S > 65536  # long-context: SP-shard global attention caches
+
+    def one_block(_):
+        return {f"s{i}": init_sublayer_cache(cfg, d, B, S, dtype, sp_shard=sp)
+                for i, d in enumerate(subs)}
+
+    blocks = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one_block(i) for i in range(n_blocks)]
+    ) if n_blocks > 1 else jax.tree.map(lambda x: x[None], one_block(0))
+    caches = {"blocks": blocks}
+    if tail:
+        caches["tail"] = {f"s{i}": init_sublayer_cache(cfg, d, B, S, dtype, sp_shard=sp)
+                          for i, d in enumerate(tail)}
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _block_body(cfg, subs, *, mode, moe_groups, dtype):
+    def body(carry, xs):
+        x, aux, pos_offset, token_ids = carry
+        # barrier at body ENTRY: the first op on x is rmsnorm's bf16->f32
+        # convert; without the barrier XLA hoists that convert out of the
+        # backward scan and stores the whole saved-carry stack in f32
+        x = jax.lax.optimization_barrier(x)
+        p_block, cache_block = xs
+        new_caches = {}
+        for i, desc in enumerate(subs):
+            c = cache_block.get(f"s{i}") if cache_block is not None else None
+            x, nc, a = apply_sublayer(
+                p_block[f"s{i}"], x, desc, cfg, mode=mode, pos_offset=pos_offset,
+                cache=c, token_ids=token_ids, moe_groups=moe_groups, dtype=dtype)
+            aux = aux + a
+            if nc is not None:
+                new_caches[f"s{i}"] = nc
+        return (x, aux, pos_offset, token_ids), (new_caches if new_caches else None)
+    return body
+
+
+def forward(params, cfg, tokens, *, mode="train", pos_offset=0, caches=None,
+            patch_embeds=None, moe_groups=1):
+    """tokens: (B, T) int32. Returns (hidden (B,T,D), aux, new_caches)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    n_blocks, subs, tail = block_spec(cfg)
+    B, T = tokens.shape
+    x = embed_tokens(params, cfg, tokens, dtype)
+    if patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(dtype), x[:, P:]], axis=1)
+    from ..parallel.sharding import seq_axis
+
+    x = constraint(x, "batch",
+                   seq_axis(T) if cfg.seq_shard_activations else None, None)
+
+    body = _block_body(cfg, subs, mode=mode, moe_groups=moe_groups, dtype=dtype)
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    token_ids = tokens if (cfg.moe and cfg.router == "hash") else jnp.zeros((B, T), jnp.int32)
+    carry0 = (x, jnp.zeros((), jnp.float32), jnp.asarray(pos_offset, jnp.int32), token_ids)
+    block_caches = caches["blocks"] if caches is not None else None
+    (x, aux, _, _), new_block_caches = jax.lax.scan(
+        body, carry0, (params["blocks"], block_caches))
+    new_caches = {"blocks": new_block_caches} if caches is not None else None
+    if tail:
+        tail_caches = {}
+        for i, desc in enumerate(tail):
+            c = caches["tail"].get(f"s{i}") if caches is not None else None
+            x, nc, a = apply_sublayer(
+                params["tail"][f"s{i}"], x, desc, cfg, mode=mode,
+                pos_offset=pos_offset, cache=c, token_ids=token_ids,
+                moe_groups=moe_groups, dtype=dtype)
+            aux = aux + a
+            if nc is not None:
+                tail_caches[f"s{i}"] = nc
+        if new_caches is not None:
+            new_caches["tail"] = tail_caches
+    x = _norm_apply(cfg, params["final_norm"], x)
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------------------
+# chunked vocab-parallel cross entropy (never materializes (B,T,V))
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(params, cfg, hidden, labels, mask=None, z_loss=1e-4):
+    dtype = hidden.dtype
+    B, T, D = hidden.shape
+    # gather T across 'model' once; the CE chunks below slice an unsharded
+    # T dim (slicing a sharded dim costs a collective per chunk)
+    hidden = constraint(hidden, "batch", None, None)
+    W = unembed_matrix(params, cfg, dtype)  # (D, V)
+    C = min(cfg.ce_chunk, T)
+    assert T % C == 0
+    nc = T // C
+    hc = jnp.moveaxis(hidden.reshape(B, nc, C, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, C), 1, 0)
+    mc = jnp.moveaxis((mask if mask is not None else jnp.ones_like(labels, jnp.float32))
+                      .reshape(B, nc, C), 1, 0)
+
+    def chunk_loss(carry, xs):
+        h, l, m = xs
+        logits = (h @ W).astype(jnp.float32)          # (B, C, V) vocab-sharded
+        logits = constraint(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot select (not take_along_axis): keeps the vocab dim sharded --
+        # GSPMD lowers this to a local select + scalar all-reduce. The
+        # constraint on the one-hot itself keeps the BACKWARD vocab-sharded
+        # too (otherwise d(embed) materializes replicated (V, D) per device).
+        oh = jax.nn.one_hot(l, logits.shape[-1], dtype=logits.dtype)
+        oh = constraint(oh, "batch", None, "model")
+        ll = jnp.einsum("bcv,bcv->bc", logits, oh)
+        zl = z_loss * jnp.square(lse)
+        loss = ((lse - ll + zl) * m).sum()
+        return carry + loss, None
+
+    total, _ = jax.lax.scan(jax.checkpoint(chunk_loss), jnp.zeros((), jnp.float32),
+                            (hc, lc, mc))
+    denom = jnp.maximum((mask if mask is not None else jnp.ones_like(labels)).sum(), 1)
+    return total / denom
+
+
+def lm_loss(params, cfg, batch, moe_groups=1, balance_coef=0.01):
+    hidden, aux, _ = forward(
+        params, cfg, batch["tokens"], mode="train",
+        patch_embeds=batch.get("patch_embeds"), moe_groups=moe_groups)
+    ce = chunked_ce_loss(params, cfg, hidden, batch["labels"], batch.get("mask"))
+    return ce + balance_coef * aux, {"ce": ce, "balance": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving entry points
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg, tokens, cache_len=None, moe_groups=1, patch_embeds=None):
+    B, T = tokens.shape
+    caches = init_caches(cfg, B, cache_len or T)
+    hidden, _, caches = forward(params, cfg, tokens, mode="prefill",
+                                caches=caches, patch_embeds=patch_embeds,
+                                moe_groups=moe_groups)
+    W = unembed_matrix(params, cfg, hidden.dtype)
+    logits = (hidden[:, -1:] @ W).astype(jnp.float32)
+    return logits[:, 0], caches
+
+
+def decode_step(params, cfg, caches, token, pos, moe_groups=1):
+    """token: (B, 1) int32; pos: scalar int32 (absolute position).
+    Returns (logits (B, V), new caches)."""
+    hidden, _, caches = forward(params, cfg, token, mode="decode",
+                                pos_offset=pos, caches=caches,
+                                moe_groups=moe_groups)
+    W = unembed_matrix(params, cfg, hidden.dtype)
+    logits = (hidden[:, -1] @ W).astype(jnp.float32)
+    logits = constraint(logits, "batch", "model")
+    return logits, caches

@@ -1,0 +1,3 @@
+"""Distribution substrate: sharding rules, collectives, pipeline."""
+from . import sharding  # noqa: F401
+from .sharding import batch_sharding, constraint, param_shardings, param_specs, use_mesh  # noqa: F401

@@ -1,0 +1,202 @@
+"""Hand-rolled optimizers (no optax dependency): AdamW and Adafactor.
+
+Optimizer state mirrors the parameter tree, so the FSDP/TP PartitionSpecs
+derived for params apply leaf-for-leaf to the state (ZeRO-style sharded
+optimizer for free). Adafactor (factored second moments, no first moment)
+is what lets the 400B MoE fit 16 GB/chip (DESIGN.md §5).
+
+Parameters under paths containing 'const_' are non-trainable (hash keys for
+hashed embeddings / hash routing) and are passed through untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import tree_paths
+
+
+def _is_trainable(path: str) -> bool:
+    return "const_" not in path
+
+
+def _map_trainable(fn, params, *rest):
+    """tree_map over trainable leaves; non-trainable pass through arg0."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    rest_flat = [jax.tree_util.tree_leaves(r) for r in rest]
+    out = []
+    for i, (kp, leaf) in enumerate(flat):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        if _is_trainable(path):
+            out.append(fn(leaf, *(rf[i] for rf in rest_flat)))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_ratio: float = 0.1
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(self.warmup_steps, 1)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / jnp.maximum(self.decay_steps - self.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        decay = self.min_ratio + (1 - self.min_ratio) * cos
+        return self.peak_lr * jnp.where(step < self.warmup_steps, warm, decay)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], tuple]  # (grads, state, params, step) -> (new_params, new_state)
+
+
+def _is_float(x):
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree) if _is_float(x)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    """float0 grads (non-trainable int leaves under grad(allow_int=True))
+    pass through untouched."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale if _is_float(g) else g, grads), norm
+
+
+def adamw(schedule: Schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm=1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "m": _map_trainable(zeros, params),
+            "v": _map_trainable(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            p2 = p - lr * (upd + weight_decay * p.astype(jnp.float32))
+            return p2.astype(p.dtype), m2, v2
+
+        flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        new_p, new_m, new_v = [], [], []
+        for i, (kp, p) in enumerate(flat_p):
+            path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+            if _is_trainable(path):
+                p2, m2, v2 = upd(p, flat_g[i], flat_m[i], flat_v[i])
+            else:
+                p2, m2, v2 = p, flat_m[i], flat_v[i]
+            new_p.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        unf = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+        return unf(new_p), {"m": unf(new_m), "v": unf(new_v)}, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def adafactor(schedule: Schedule, eps=1e-30, clip_threshold=1.0,
+              decay_rate=0.8, weight_decay=0.0, clip_norm=1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), no momentum.
+    State per matrix param: one row + one col accumulator -- O(n+m) not O(nm)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"f": _map_trainable(st, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_rate)
+
+        def upd(p, g, st):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta2 * st["vr"] + (1 - beta2) * g2.mean(axis=-1)   # (..., n)
+                vc = beta2 * st["vc"] + (1 - beta2) * g2.mean(axis=-2)   # (..., m)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                # rank-1 reconstruction: v ~ (vr/denom)[..., :, None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(vr / denom + eps)[..., :, None] \
+                      * jax.lax.rsqrt(vc + eps)[..., None, :]
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_st = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p2 = p - lr * (u + weight_decay * p.astype(jnp.float32))
+            return p2.astype(p.dtype), new_st
+
+        flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        # state['f'] mirrors params structurally but each leaf is a dict;
+        # flatten at the param level via the same treedef paths
+        st_leaves = _leaves_matching(state["f"], params)
+        new_p, new_st = [], []
+        for i, (kp, p) in enumerate(flat_p):
+            path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+            if _is_trainable(path):
+                p2, s2 = upd(p, flat_g[i], st_leaves[i])
+            else:
+                p2, s2 = p, st_leaves[i]
+            new_p.append(p2)
+            new_st.append(s2)
+        unf = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+        return unf(new_p), {"f": unf(new_st)}, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def _leaves_matching(state_tree, params):
+    """Leaves of state_tree grouped at param-leaf granularity."""
+    is_leaf = lambda x: bool(isinstance(x, dict) and (set(x) <= {"v", "vr", "vc"}) and x)
+    flat, _ = jax.tree_util.tree_flatten(state_tree, is_leaf=is_leaf)
+    return flat
+
+
+def make_optimizer(name: str, schedule: Schedule) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule)
+    if name == "adafactor":
+        return adafactor(schedule)
+    raise ValueError(name)

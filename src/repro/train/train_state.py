@@ -1,0 +1,79 @@
+"""Train state: params + optimizer state + step, with sharding helpers."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import sharding as sh
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+
+
+def init_state(api, optimizer, rng) -> TrainState:
+    params = api.init(rng)
+    opt_state = optimizer.init(params)
+    return TrainState(jnp.zeros((), jnp.int32), params, opt_state)
+
+
+def state_shardings(state: TrainState, mesh, fsdp_pods=False):
+    """NamedShardings for the whole state: optimizer leaves inherit the
+    matching parameter's spec where shapes align (ZeRO)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    p_specs = sh.param_specs(state.params, fsdp_pods)
+
+    def opt_spec_like(path_spec, leaf):
+        return path_spec
+
+    # m/v (adamw) mirror params exactly; adafactor factored states get the
+    # param's spec truncated to their rank (drop the contracted dim).
+    def spec_for_opt(spec, leaf, param_leaf):
+        if param_leaf is None:
+            return P()
+        if leaf.ndim == param_leaf.ndim:
+            return spec
+        # factored accumulators: vr drops last dim, vc drops second-to-last
+        dims = list(spec)
+        if leaf.shape == param_leaf.shape[:-1]:
+            dims = dims[:-1]
+        elif leaf.shape == param_leaf.shape[:-2] + param_leaf.shape[-1:]:
+            dims = dims[:-2] + dims[-1:]
+        else:
+            return P()
+        return P(*dims)
+
+    def build(opt_tree):
+        # walk opt tree; match leaves to params by tree prefix when possible
+        if isinstance(opt_tree, dict) and set(opt_tree) <= {"m", "v"} and opt_tree:
+            return {k: jax.tree.map(lambda s: s, p_specs) for k in opt_tree}
+        return None
+
+    # Simple + robust: adamw state mirrors params; adafactor handled leafwise
+    opt_state = state.opt_state
+    if isinstance(opt_state, dict) and set(opt_state) == {"m", "v"}:
+        opt_specs = {"m": p_specs, "v": p_specs}
+    else:
+        # adafactor: map each factored dict against its param
+        flat_p, treedef = jax.tree_util.tree_flatten(state.params)
+        is_leaf = lambda x: bool(isinstance(x, dict) and (set(x) <= {"v", "vr", "vc"}) and x)
+        flat_f = jax.tree_util.tree_flatten(opt_state["f"], is_leaf=is_leaf)[0]
+        flat_s = jax.tree_util.tree_flatten(p_specs,
+                                            is_leaf=lambda x: isinstance(x, P))[0]
+        out = []
+        for pl, fl, spec in zip(flat_p, flat_f, flat_s):
+            out.append({k: spec_for_opt(spec, v, pl) for k, v in fl.items()})
+        opt_specs = {"f": jax.tree_util.tree_unflatten(treedef, out)}
+
+    to_sharding = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P))
+    return TrainState(
+        NamedSharding(mesh, P()),
+        to_sharding(p_specs),
+        to_sharding(opt_specs),
+    )

@@ -1,0 +1,73 @@
+"""Checkpointer: roundtrip, integrity (corruption detection), keep-k,
+latest-valid resume, bfloat16 handling."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (16, 8)),
+                   "b16": jax.random.normal(k, (4,)).astype(jnp.bfloat16)},
+        "opt": {"m": jnp.zeros((16, 8))},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state()
+    ck.save(7, st)
+    assert ck.steps() == [7]
+    assert ck.verify(7)
+    out = ck.restore(7, jax.tree.map(lambda x: jnp.zeros_like(x), st))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a).astype(np.float32),
+                                      np.asarray(b).astype(np.float32))
+    assert out["params"]["b16"].dtype == jnp.bfloat16
+
+
+def test_corruption_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1))
+    ck.save(2, _state(2))
+    # corrupt the newest arrays file
+    path = os.path.join(str(tmp_path), "step_2", "arrays.npz")
+    data = bytearray(open(path, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    assert not ck.verify(2)
+    assert ck.verify(1)
+    assert ck.latest_valid() == 1  # resume skips the corrupt checkpoint
+
+
+def test_keep_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(s))
+    assert ck.steps() == [3, 4]
+
+
+def test_manifest_contents(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _state())
+    with open(os.path.join(str(tmp_path), "step_5", "manifest.json")) as f:
+        man = json.load(f)
+    assert man["step"] == 5
+    assert "params/w" in man["leaves"]
+    for meta in man["leaves"].values():
+        assert len(meta["fingerprint"]) == 16  # 64-bit multilinear fp
+
+
+def test_restore_wrong_structure_fails(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state())
+    with pytest.raises(KeyError):
+        ck.restore(1, {"different": jnp.zeros(3)})

@@ -1,0 +1,84 @@
+"""Baseline hash functions (Rabin-Karp, SAX, NH, FNV, Zobrist)."""
+import numpy as np
+import pytest
+
+from repro.core import baselines, keys as keymod
+
+RNG = np.random.Generator(np.random.Philox(key=np.uint64(99)))
+
+
+def test_rabin_karp_matches_ref():
+    toks = RNG.integers(0, 2**32, size=16, dtype=np.uint64).astype(np.uint32)
+    h = 0
+    for t in toks:
+        h = (h * 31 + int(t)) % (1 << 32)
+    assert int(baselines.rabin_karp(toks)) == h
+
+
+def test_sax_matches_ref():
+    toks = RNG.integers(0, 2**32, size=16, dtype=np.uint64).astype(np.uint32)
+    h = 0
+    for t in toks:
+        h = (h ^ (((h << 5) % (1 << 32)) + (h >> 2) + int(t))) % (1 << 32)
+    assert int(baselines.sax(toks)) == h
+
+
+def test_fnv_matches_ref():
+    toks = RNG.integers(0, 2**32, size=8, dtype=np.uint64).astype(np.uint32)
+    h = 2166136261
+    for t in toks:
+        for shift in (0, 8, 16, 24):
+            h = ((h ^ ((int(t) >> shift) & 0xFF)) * 16777619) % (1 << 32)
+    assert int(baselines.fnv1a(toks)) == h
+
+
+def test_nh_matches_python_oracle():
+    n = 8
+    kb = keymod.KeyBuffer(seed=5)
+    _, klo = kb.hi_lo(n)
+    toks = RNG.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32)
+    hi, lo = baselines.nh(toks, klo)
+    got = (int(hi) << 32) | int(lo)
+    acc = 0
+    for i in range(n // 2):
+        a = (int(klo[2 * i]) + int(toks[2 * i])) % (1 << 32)
+        b = (int(klo[2 * i + 1]) + int(toks[2 * i + 1])) % (1 << 32)
+        acc = (acc + a * b) % (1 << 64)
+    assert got == acc
+
+
+def test_nh_batched():
+    n, B = 8, 4
+    kb = keymod.KeyBuffer(seed=6)
+    _, klo = kb.hi_lo(n)
+    toks = RNG.integers(0, 2**32, size=(B, n), dtype=np.uint64).astype(np.uint32)
+    hi, lo = baselines.nh(toks, klo)
+    assert hi.shape == (B,)
+    h0 = baselines.nh(toks[0], klo)
+    assert int(hi[0]) == int(h0[0]) and int(lo[0]) == int(h0[1])
+
+
+def test_zobrist_3wise_behaviour():
+    z = baselines.Zobrist(n_positions=4, alphabet=16, seed=3)
+    toks = np.asarray([1, 5, 0, 15], np.int32)
+    h1 = int(z(toks))
+    # xor structure: flipping one position changes by a fixed xor delta
+    toks2 = toks.copy()
+    toks2[2] = 7
+    delta = h1 ^ int(z(toks2))
+    toks3 = np.asarray([2, 3, 0, 1], np.int32)
+    toks4 = toks3.copy()
+    toks4[2] = 7
+    assert (int(z(toks3)) ^ int(z(toks4))) == delta
+
+
+def test_rabin_karp_weakness_vs_multilinear():
+    """RK with base 31 has trivial structural collisions that Multilinear
+    provably cannot have w.p. > 2^-32: h([a, b]) == h([a-1, b+31])."""
+    a, b = 100, 200
+    s1 = np.asarray([a, b], np.uint32)
+    s2 = np.asarray([a - 1, b + 31], np.uint32)
+    assert int(baselines.rabin_karp(s1)) == int(baselines.rabin_karp(s2))
+    from repro.core import ops as cops
+
+    assert cops.hash_tokens_host(s1) != cops.hash_tokens_host(s2)

@@ -1,0 +1,104 @@
+"""GF(2^32) carry-less Multilinear: clmul/Barrett vs python-int ground truth."""
+import numpy as np
+import pytest
+
+from repro.core import gf
+
+RNG = np.random.Generator(np.random.Philox(key=np.uint64(1234)))
+
+
+def test_clmul32_matches_ref():
+    for _ in range(200):
+        a = int(RNG.integers(0, 2**32))
+        b = int(RNG.integers(0, 2**32))
+        hi, lo = gf.clmul32(np.uint32(a), np.uint32(b))
+        got = (int(hi) << 32) | int(lo)
+        assert got == gf.clmul_ref(a, b), (a, b)
+
+
+def test_clmul32_vectorized():
+    a = RNG.integers(0, 2**32, size=64, dtype=np.uint64).astype(np.uint32)
+    b = RNG.integers(0, 2**32, size=64, dtype=np.uint64).astype(np.uint32)
+    hi, lo = gf.clmul32(a, b)
+    for i in range(64):
+        want = gf.clmul_ref(int(a[i]), int(b[i]))
+        assert ((int(hi[i]) << 32) | int(lo[i])) == want
+
+
+def test_barrett_matches_long_division():
+    """Barrett reduction == naive GF(2)[x] remainder for 63-bit inputs."""
+    for _ in range(300):
+        q = int(RNG.integers(0, 2**63))
+        hi, lo = np.uint32(q >> 32), np.uint32(q & 0xFFFFFFFF)
+        got = int(gf.barrett_reduce(hi, lo))
+        assert got == gf.poly_mod_ref(q), hex(q)
+
+
+def test_poly_is_irreducible_shape():
+    """p(x) = x^32 + x^7 + x^6 + x^2 + 1: degree(p - x^32) = 7 <= 16, the
+    Barrett-friendly shape (paper §4)."""
+    low = gf.POLY_FULL_INT ^ (1 << 32)
+    assert low.bit_length() - 1 <= 16
+    assert gf.POLY_FULL_INT >> 32 == 1
+
+
+@pytest.mark.parametrize("n", [2, 4, 16, 64])
+def test_gf_multilinear_matches_ref(n):
+    keys = RNG.integers(0, 2**32, size=n + 1, dtype=np.uint64).astype(np.uint32)
+    toks = RNG.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32)
+    got = int(gf.gf_multilinear(toks, keys))
+    assert got == gf.gf_multilinear_ref(toks, keys)
+
+
+@pytest.mark.parametrize("n", [2, 4, 16])
+def test_gf_multilinear_hm_matches_ref(n):
+    keys = RNG.integers(0, 2**32, size=n + 1, dtype=np.uint64).astype(np.uint32)
+    toks = RNG.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32)
+
+    def hm_ref(tokens, keys32):
+        acc = int(keys32[0])
+        for i in range(len(tokens) // 2):
+            a = int(keys32[2 * i + 1]) ^ int(tokens[2 * i])
+            b = int(keys32[2 * i + 2]) ^ int(tokens[2 * i + 1])
+            acc ^= gf.clmul_ref(a, b)
+        return gf.poly_mod_ref(acc)
+
+    assert int(gf.gf_multilinear_hm(toks, keys)) == hm_ref(toks, keys)
+
+
+def test_gf_multilinear_batched():
+    n, B = 8, 5
+    keys = RNG.integers(0, 2**32, size=n + 1, dtype=np.uint64).astype(np.uint32)
+    toks = RNG.integers(0, 2**32, size=(B, n), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(gf.gf_multilinear(toks, keys))
+    for b in range(B):
+        assert got[b] == gf.gf_multilinear_ref(toks[b], keys)
+
+
+def test_gf_strong_universality_small_field():
+    """Strong universality of GF-Multilinear in GF(2^3), p = x^3+x+1:
+    exhaustive over all key pairs for length-1 strings."""
+    p = 0b1011
+    field = 8
+
+    def fmul(a, b):
+        return _poly_mod_small(gf.clmul_ref(a, b), p)
+
+    def _poly_mod_small(q, p):
+        dp = p.bit_length() - 1
+        while q.bit_length() - 1 >= dp and q:
+            q ^= p << (q.bit_length() - 1 - dp)
+        return q
+
+    from collections import Counter
+
+    for s, s2 in [(1, 2), (3, 7), (5, 6)]:
+        joint = Counter()
+        for m1 in range(field):
+            for m2 in range(field):
+                h1 = m1 ^ fmul(m2, s)
+                h2 = m1 ^ fmul(m2, s2)
+                joint[(h1, h2)] += 1
+        # strongly universal over GF(2^3): every cell hit exactly once
+        assert all(v == 1 for v in joint.values())
+        assert len(joint) == field * field

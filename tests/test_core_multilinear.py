@@ -1,0 +1,126 @@
+"""Correctness of the Multilinear families: limb-jnp vs numpy-uint64 vs
+python-int ground truth, padding policy, batching."""
+import numpy as np
+import pytest
+
+from repro.core import hostref, keys as keymod, multilinear as ml
+from repro.core import ops as cops
+
+RNG = np.random.Generator(np.random.Philox(key=np.uint64(42)))
+
+
+def _rand_tokens(*shape):
+    return RNG.integers(0, 2**32, size=shape, dtype=np.uint64).astype(np.uint32)
+
+
+@pytest.mark.parametrize("n", [2, 4, 6, 8, 64, 126, 1024])
+@pytest.mark.parametrize("fam", ["multilinear", "multilinear_2x2", "multilinear_hm"])
+def test_limb_matches_numpy_u64(n, fam):
+    kb = keymod.KeyBuffer(seed=7)
+    ku = kb.u64(n + 1)
+    hi, lo = keymod.split_hi_lo(ku)
+    toks = _rand_tokens(n)
+    jnp_fn = ml.FAMILIES[fam]
+    got = np.asarray(jnp_fn(toks, hi, lo))
+    if fam == "multilinear_hm":
+        want = hostref.multilinear_hm_np(toks, ku)
+    else:
+        want = hostref.multilinear_np(toks, ku)
+    assert got.dtype == np.uint32
+    assert got == want
+
+
+@pytest.mark.parametrize("fam,hm", [("multilinear", False), ("multilinear_hm", True)])
+def test_numpy_matches_python_int_oracle(fam, hm):
+    kb = keymod.KeyBuffer(seed=3)
+    for n in (2, 8, 10):
+        ku = kb.u64(n + 1)
+        toks = _rand_tokens(n)
+        np_fn = hostref.multilinear_hm_np if hm else hostref.multilinear_np
+        got = int(np_fn(toks, ku))
+        want = hostref.python_int_oracle(toks, ku, hm=hm)
+        assert got == want
+
+
+def test_2x2_equals_plain():
+    """MULTILINEAR (2-by-2) is the same function, different evaluation order."""
+    kb = keymod.KeyBuffer(seed=9)
+    n = 128
+    hi, lo = kb.hi_lo(n + 1)
+    toks = _rand_tokens(n)
+    assert np.asarray(ml.multilinear(toks, hi, lo)) == np.asarray(
+        ml.multilinear_2x2(toks, hi, lo)
+    )
+
+
+def test_batched_matches_loop():
+    kb = keymod.KeyBuffer(seed=11)
+    n, B = 32, 17
+    ku = kb.u64(n + 1)
+    hi, lo = keymod.split_hi_lo(ku)
+    toks = _rand_tokens(B, n)
+    batched = np.asarray(ml.multilinear_hm(toks, hi, lo))
+    for b in range(B):
+        assert batched[b] == hostref.multilinear_hm_np(toks[b], ku)
+
+
+def test_zero_padding_is_free():
+    """Zero chars contribute m*0: padding after the 1-sentinel cannot change
+    the hash (the property the variable-length policy relies on)."""
+    kb = keymod.KeyBuffer(seed=13)
+    toks = _rand_tokens(10)
+    padded = np.concatenate([toks, np.zeros(6, np.uint32)])
+    ku = kb.u64(len(padded) + 1)
+    assert hostref.multilinear_np(toks, ku) == hostref.multilinear_np(padded, ku)
+
+
+def test_variable_length_distinguishes_prefixes():
+    """With the append-1 rule, a string and its zero-extended prefix differ."""
+    base = _rand_tokens(8)
+    with_zero = np.concatenate([base, np.zeros(2, np.uint32)])
+    h1 = cops.hash_tokens_host(base, variable_length=True)
+    h2 = cops.hash_tokens_host(with_zero, variable_length=True)
+    assert h1 != h2  # w.p. 1 - 2^-32 per key draw; deterministic keys here
+
+
+def test_prepare_variable_length():
+    toks = np.asarray([[5, 6, 7, 0, 0]], dtype=np.uint32)
+    out = np.asarray(ml.prepare_variable_length(toks, np.asarray([3]), 5))
+    assert out.shape[-1] % 2 == 0
+    assert list(out[0][:4]) == [5, 6, 7, 1]
+    assert (out[0][4:] == 0).all()
+
+
+def test_key_buffer_extension_is_stable():
+    """On-demand extension (paper §6) must not change earlier keys."""
+    kb = keymod.KeyBuffer(seed=21, initial=8)
+    first = kb.u64(8).copy()
+    kb.ensure(4096)
+    assert (kb.u64(8) == first).all()
+    # and pure-function regeneration agrees
+    again = keymod.generate_keys_u64(21, 0, 4096)
+    assert (kb.u64(4096) == again).all()
+
+
+def test_multiword_k64_matches_u64_path():
+    """K=64 multiword (2 limbs, 1 word/char) == the standard u64 Multilinear."""
+    kb = keymod.KeyBuffer(seed=31)
+    n = 16
+    ku = kb.u64(n + 1)
+    toks = _rand_tokens(n)
+    key_limbs = kb.limbs(n, 2)
+    got = np.asarray(ml.multilinear_multiword(toks[:, None], key_limbs))
+    # reference with the same key layout
+    k64 = key_limbs[:, 0].astype(np.uint64) | (key_limbs[:, 1].astype(np.uint64) << np.uint64(32))
+    want = hostref.multilinear_np(toks, k64)
+    assert got == want
+
+
+def test_fingerprint_bytes_sensitivity():
+    data = b"The quick brown fox jumps over the lazy dog" * 100
+    fp = cops.fingerprint_bytes(data)
+    assert fp != cops.fingerprint_bytes(data[:-1])
+    assert fp != cops.fingerprint_bytes(data + b"\0")  # length is hashed
+    assert fp == cops.fingerprint_bytes(bytes(data))
+    big = bytes(RNG.integers(0, 256, size=1 << 19, dtype=np.uint64).astype(np.uint8))
+    assert cops.fingerprint_bytes(big) != cops.fingerprint_bytes(big[::-1])

@@ -1,0 +1,67 @@
+"""Optimizers: convergence on quadratic, state shapes, const filtering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import Schedule, adafactor, adamw, clip_by_global_norm
+
+
+def _quadratic_problem(opt, steps=200):
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"layer": {"w": jnp.zeros(3)}, "const_keys": jnp.asarray([7, 7], jnp.uint32)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["layer"]["w"] - target) ** 2)
+
+    for step in range(steps):
+        grads = jax.grad(loss, allow_int=True)(params)
+        params, state, metrics = opt.update(grads, state, params, step)
+    return params, metrics
+
+
+def test_adamw_converges():
+    opt = adamw(Schedule(peak_lr=0.05, warmup_steps=10, decay_steps=200),
+                weight_decay=0.0)
+    params, metrics = _quadratic_problem(opt)
+    np.testing.assert_allclose(np.asarray(params["layer"]["w"]),
+                               [1.5, -2.0, 0.5], atol=0.05)
+    assert float(metrics["grad_norm"]) >= 0
+
+
+def test_adamw_leaves_consts_alone():
+    opt = adamw(Schedule(peak_lr=0.05, warmup_steps=10, decay_steps=100))
+    params, _ = _quadratic_problem(opt, steps=20)
+    assert (np.asarray(params["const_keys"]) == [7, 7]).all()
+
+
+def test_adafactor_converges():
+    opt = adafactor(Schedule(peak_lr=0.05, warmup_steps=10, decay_steps=300))
+    params, _ = _quadratic_problem(opt, steps=300)
+    np.testing.assert_allclose(np.asarray(params["layer"]["w"]),
+                               [1.5, -2.0, 0.5], atol=0.1)
+
+
+def test_adafactor_matrix_state_is_factored():
+    opt = adafactor(Schedule())
+    params = {"mlp": {"w": jnp.zeros((32, 8))}}
+    st = opt.init(params)
+    leaf = st["f"]["mlp"]["w"]
+    assert set(leaf) == {"vr", "vc"}
+    assert leaf["vr"].shape == (32,)
+    assert leaf["vc"].shape == (8,)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    np.testing.assert_allclose(np.asarray(clipped["a"]), 0.5, rtol=1e-5)
+
+
+def test_schedule_shape():
+    s = Schedule(peak_lr=1e-3, warmup_steps=10, decay_steps=100, min_ratio=0.1)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1e-3) < 1e-9
+    assert float(s(100)) <= 1e-3 * 0.1 + 1e-9
+    assert abs(float(s(5)) - 0.5e-3) < 1e-9

@@ -1,0 +1,184 @@
+"""Validation of the paper's own mathematical claims (EXPERIMENTS.md
+§Paper-validation). Every test here corresponds to a numbered claim,
+example, or counterexample in the paper text."""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import theory, universality as uni
+from repro.core.universality import (
+    folklore_xor_small,
+    multilinear_hm_small,
+    multilinear_small,
+)
+
+
+class TestProp31:
+    def test_example_1(self):
+        """Paper Example 1: (6x+10 mod 64) / 4 = 5 has solutions {2,23,34,55}."""
+        sols = theory.prop31_solve_brute(a=6, b=5, c=10, K=6, L=3)
+        assert sols == [2, 23, 34, 55]
+        assert len(sols) == theory.prop31_solution_count(6, 3)
+
+    @pytest.mark.parametrize("K,L", [(6, 3), (5, 4), (8, 5), (4, 1)])
+    def test_solution_count_exhaustive(self, K, L):
+        """Prop 3.1: exactly 2^(L-1) solutions for every a in [1,2^L),
+        b in [0, 2^(K-L+1)), c in [0, 2^K) -- spot-checked over a grid."""
+        rng = np.random.Generator(np.random.Philox(key=np.uint64(5)))
+        for _ in range(12):
+            a = int(rng.integers(1, 1 << L))
+            b = int(rng.integers(0, 1 << (K - L + 1)))
+            c = int(rng.integers(0, 1 << K))
+            sols = theory.prop31_solve_brute(a, b, c, K, L)
+            assert len(sols) == 2 ** (L - 1), (a, b, c)
+            assert sols == theory.prop31_solve_constructive(a, b, c, K, L)
+
+
+class TestTheorem31:
+    """Exhaustive strong universality at K=6, L=3 (4-bit hash values)."""
+
+    def test_multilinear_len1_exhaustive(self):
+        for s, s2 in [((0,), (1,)), ((3,), (7,)), ((5,), (2,))]:
+            dev = uni.check_strong_universality(multilinear_small, s, s2, K=6, L=3, n_keys=2)
+            assert dev == 0, f"strings {s},{s2}: deviation {dev}"
+
+    def test_multilinear_len2_exhaustive(self):
+        for s, s2 in [((0, 0), (2, 6)), ((1, 2), (1, 3)), ((7, 7), (0, 7))]:
+            dev = uni.check_strong_universality(multilinear_small, s, s2, K=6, L=3, n_keys=3)
+            assert dev == 0
+
+    def test_multilinear_hm_len2_exhaustive(self):
+        for s, s2 in [((0, 0), (2, 6)), ((1, 2), (1, 3)), ((7, 7), (0, 7)), ((4, 2), (4, 5))]:
+            dev = uni.check_strong_universality(multilinear_hm_small, s, s2, K=6, L=3, n_keys=3)
+            assert dev == 0
+
+    def test_uniformity_corollary(self):
+        """Strongly universal => uniform (paper §1)."""
+        for s in [(0,), (5,), (7,)]:
+            assert uni.check_uniformity(multilinear_small, s, K=6, L=3, n_keys=2) == 0
+        for s in [(0, 0), (2, 6)]:
+            assert uni.check_uniformity(multilinear_hm_small, s, K=6, L=3, n_keys=3) == 0
+
+    def test_different_lengths_via_zero_pad(self):
+        """Thm 3.1 proof device: distinct-length strings hash independently
+        after zero-padding the shorter + the never-ends-in-zero rule."""
+        dev = uni.check_strong_universality(
+            multilinear_small, (3, 1), (3, 0), K=6, L=3, n_keys=3
+        )
+        # (3,1) vs (3,0): differ in last char, still strongly universal
+        assert dev == 0
+
+
+class TestPaperCounterexamples:
+    def test_folklore_family_not_universal(self):
+        """§3: strings (0,0) and (2,6) collide w.p. 576/4096 > 1/2^3 at
+        K=6, L=3 -- the paper's exact numeric falsification."""
+        p = uni.collision_probability(folklore_xor_small, (0, 0), (2, 6), K=6, L=3, n_keys=2)
+        assert p == Fraction(576, 4096)
+        assert p > Fraction(1, 8)
+
+    def test_nh_nonuniform(self):
+        """§5.6: NH's zero-value excess: P(h=0) >= (2^(L/2+1)-1)/2^L for a
+        1-pair string; exhaustive at L=6 (3-bit chars, 6-bit hash)."""
+        L = 6
+        half = L // 2
+        mod, hmod = 1 << L, 1 << half
+        m1, m2 = np.meshgrid(np.arange(mod), np.arange(mod), indexing="ij")
+        s = (1, 2)
+        h = (((m1 + s[0]) % hmod) * ((m2 + s[1]) % hmod)) % mod
+        p_zero = Fraction(int((h == 0).sum()), mod * mod)
+        assert p_zero >= Fraction(2 ** (half + 1) - 1, 1 << L)
+        assert p_zero > Fraction(1, 1 << L)  # strictly worse than uniform
+
+    def test_nh_low_bits_break(self):
+        """§5.6: 'for L=6, there are 96 pairs of distinct strings colliding
+        with probability 1 over the least two significant bits'."""
+        L, half = 6, 3
+        mod, hmod = 1 << L, 1 << half
+        keys1, keys2 = np.meshgrid(np.arange(mod), np.arange(mod), indexing="ij")
+        strings = [(a, b) for a in range(hmod) for b in range(hmod)]
+        always = 0
+        for i in range(len(strings)):
+            si = strings[i]
+            hi = ((((keys1 + si[0]) % hmod) * ((keys2 + si[1]) % hmod)) % mod) & 3
+            for j in range(i + 1, len(strings)):
+                sj = strings[j]
+                hj = ((((keys1 + sj[0]) % hmod) * ((keys2 + sj[1]) % hmod)) % mod) & 3
+                if (hi == hj).all():
+                    always += 1
+        assert always == 96
+
+    def test_squares_fail_in_gf2(self):
+        """§2: (m+s)^2 = m^2 + s^2 in GF(2^L) => h(ab) == h(ba) always."""
+        from repro.core.gf import clmul_ref, poly_mod_ref
+
+        def sq_hash(s, keys):
+            acc = keys[0]
+            for i, ch in enumerate(s):
+                v = keys[i + 1] ^ ch
+                acc ^= clmul_ref(v, v)
+            return poly_mod_ref(acc)
+
+        keys = [0x9B, 0x3C, 0x5A]
+        a, b = 0xAB, 0xCD
+        assert sq_hash([a, b], keys) == sq_hash([b, a], keys)
+
+
+class TestWordSizeTheory:
+    def test_stinson_ratio_at_least_one(self):
+        for M in (256, 4096, 1 << 15):
+            for L in (8, 16, 32, 62, 97):
+                assert theory.stinson_ratio(M, L, z=32) >= 1.0
+
+    def test_eq4_memory_optimum(self):
+        """Eq. 4: L* = sqrt((z-1)M/2) beats neighboring L by random-bit use."""
+        M, z = 1 << 20, 32
+        Lstar = round(theory.optimal_L_memory(M, z))
+        best = theory.multilinear_random_bits(M, Lstar, z)
+        assert best <= theory.multilinear_random_bits(M, Lstar * 4, z)
+        assert best <= theory.multilinear_random_bits(M, max(1, Lstar // 4), z)
+
+    def test_eq4_ratio_converges_to_one(self):
+        """Fig. 1: with free word size the Stinson ratio -> 1 for large M."""
+        z = 32
+        ratios = []
+        for M in (1 << 10, 1 << 16, 1 << 22):
+            L = max(1, round(theory.optimal_L_memory(M, z)))
+            ratios.append(theory.stinson_ratio(M, L, z))
+        assert ratios[-1] < ratios[0]
+        assert ratios[-1] < 1.05
+
+    def test_fixed_wordsize_ratio_two(self):
+        """Fig. 1: K=64 (L=33) gives ratio ~2 for long strings; K=128 ~1.33."""
+        M, z = 1 << 22, 32
+        assert abs(theory.stinson_ratio(M, 33, z) - 64 / 33) < 0.01
+        assert abs(theory.stinson_ratio(M, 97, z) - 128 / 97) < 0.01
+
+    def test_eq5_compute_optimum(self):
+        """Eq. 5: argmin of (z+L-1)^a / L is (z-1)/(a-1); paper: a=1.5, z=32
+        => L*=62."""
+        z, a = 32, 1.5
+        assert theory.optimal_L_compute(z, a) == 62.0
+        c62 = theory.compute_cost_per_bit(62, z, a)
+        for L in (16, 31, 124, 248):
+            assert c62 <= theory.compute_cost_per_bit(L, z, a)
+
+
+class TestFullWidthUniversalityMonteCarlo:
+    def test_k64_collision_rate(self):
+        """The production K=64 family: collision rate over random keys should
+        be ~2^-32; with 4000 trials we assert *no* collision (prob ~1e-6)."""
+        from repro.core.hostref import multilinear_np
+
+        rng = np.random.Generator(np.random.Philox(key=np.uint64(17)))
+        s = rng.integers(0, 2**32, size=16, dtype=np.uint64).astype(np.uint32)
+        s2 = s.copy()
+        s2[7] ^= np.uint32(1)  # adversarially close pair
+        from repro.core import keys as keymod
+
+        coll = 0
+        for t in range(4000):
+            ku = keymod.generate_keys_u64(t * 7919 + 13, 0, 17)
+            coll += int(multilinear_np(s, ku) == multilinear_np(s2, ku))
+        assert coll == 0

@@ -1,0 +1,91 @@
+"""Hypothesis property tests on the hashing core's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hostref, keys as keymod, ops as cops
+from repro.core.gf import clmul_ref, poly_mod_ref
+
+KB = keymod.KeyBuffer(seed=0xABCD)
+
+tokens_st = st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(tokens_st)
+def test_multilinear_matches_int_oracle(toks):
+    arr = np.asarray(toks, np.uint32)
+    ku = KB.u64(len(arr) + 1)
+    assert int(hostref.multilinear_np(arr, ku)) == hostref.python_int_oracle(arr, ku)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=2, max_size=64).filter(lambda x: len(x) % 2 == 0))
+def test_hm_matches_int_oracle(toks):
+    arr = np.asarray(toks, np.uint32)
+    ku = KB.u64(len(arr) + 1)
+    assert int(hostref.multilinear_hm_np(arr, ku)) == hostref.python_int_oracle(arr, ku, hm=True)
+
+
+@settings(max_examples=40, deadline=None)
+@given(tokens_st, st.integers(1, 8))
+def test_zero_pad_invariance(toks, extra):
+    """Appending zero characters never changes the fixed-length hash."""
+    arr = np.asarray(toks, np.uint32)
+    padded = np.concatenate([arr, np.zeros(extra, np.uint32)])
+    ku = KB.u64(len(padded) + 1)
+    assert hostref.multilinear_np(arr, ku) == hostref.multilinear_np(padded, ku)
+
+
+@settings(max_examples=40, deadline=None)
+@given(tokens_st)
+def test_variable_length_hash_is_length_sensitive(toks):
+    """With the append-1 policy, s and s+[0] must hash differently (they are
+    different strings even though the fixed-length hash would agree)."""
+    arr = np.asarray(toks, np.uint32)
+    ext = np.concatenate([arr, np.zeros(1, np.uint32)])
+    assert cops.hash_tokens_host(arr) != cops.hash_tokens_host(ext)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_clmul_distributes_over_xor(a, b, c):
+    """Carry-less multiplication is linear over GF(2): a*(b^c) == a*b ^ a*c."""
+    assert clmul_ref(a, b ^ c) == clmul_ref(a, b) ^ clmul_ref(a, c)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**63 - 1))
+def test_barrett_is_canonical_remainder(q):
+    r = poly_mod_ref(q)
+    assert r < (1 << 32)
+    # r == q mod p: q ^ r must be divisible by p (long division leaves 0)
+    assert poly_mod_ref(q ^ r) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 2**32 - 1), min_size=4, max_size=4), min_size=8, max_size=200))
+def test_shard_assignment_range_and_determinism(rows):
+    arr = np.asarray(rows, np.uint32)
+    sh = cops.shard_assignment(arr, n_shards=13)
+    assert sh.shape == (len(rows),)
+    assert ((sh >= 0) & (sh < 13)).all()
+    again = cops.shard_assignment(arr, n_shards=13)
+    assert (sh == again).all()
+    # different salt -> (almost surely) different assignment for >=8 rows
+    other = cops.shard_assignment(arr, n_shards=13, salt=1)
+    if len(rows) >= 32:
+        assert not (sh == other).all()
+
+
+def test_shard_uniformity_chi2():
+    """Uniformity (paper §1): chi^2 of shard loads under the strongly
+    universal family stays within 5 sigma for 64k random rows."""
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(1)))
+    rows = rng.integers(0, 2**32, size=(1 << 16, 4), dtype=np.uint64).astype(np.uint32)
+    n_shards = 64
+    sh = cops.shard_assignment(rows, n_shards=n_shards)
+    counts = np.bincount(sh, minlength=n_shards)
+    expected = len(rows) / n_shards
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    # chi2 ~ chi2_{63}: mean 63, sd sqrt(126) ~ 11.2; 5 sigma ~ 119
+    assert chi2 < 119, f"shard loads too skewed: chi2={chi2}"

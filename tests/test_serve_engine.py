@@ -1,0 +1,67 @@
+"""Serving engine: continuous batching correctness + prefix-cache hashing."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serve import Request, ServeEngine
+
+CFG = get_config("mistral_nemo_12b", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    api = build(CFG)
+    params = api.init(jax.random.key(0))
+    return api, params
+
+
+def test_requests_complete(engine):
+    api, params = engine
+    eng = ServeEngine(api, params, n_slots=2, max_seq=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, CFG.vocab_size, size=8).astype(np.int32),
+                    max_new_tokens=6) for i in range(5)]
+    eng.submit_all(reqs)
+    for r in reqs:
+        assert r.done
+        assert len(r.out_tokens) == 6
+        assert all(0 <= t < CFG.vocab_size for t in r.out_tokens)
+    assert eng.stats["prefills"] == 5
+
+
+def test_prefix_cache_hits(engine):
+    api, params = engine
+    eng = ServeEngine(api, params, n_slots=2, max_seq=64)
+    prompt = np.arange(8, dtype=np.int32)
+    reqs = [Request(i, prompt.copy(), max_new_tokens=4) for i in range(3)]
+    eng.submit_all(reqs)
+    assert eng.stats["prefix_hits"] == 2  # 2nd and 3rd identical prompts
+    # identical prompts assigned in the SAME tick decode identically; the
+    # 3rd joins later at a shifted lockstep position (documented engine
+    # simplification), so only 0 and 1 are compared
+    assert reqs[0].out_tokens == reqs[1].out_tokens
+
+
+def test_greedy_matches_manual_decode(engine):
+    """Engine output == manual prefill+decode loop for a single request."""
+    api, params = engine
+    import jax.numpy as jnp
+
+    prompt = np.arange(5, dtype=np.int32) + 3
+    eng = ServeEngine(api, params, n_slots=1, max_seq=32)
+    req = Request(0, prompt.copy(), max_new_tokens=4)
+    eng.submit_all([req])
+
+    logits, caches = api.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                                 cache_len=32)
+    toks = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    for _ in range(3):
+        lg, caches = api.decode_step(params, caches,
+                                     jnp.asarray([[toks[-1]]], jnp.int32),
+                                     jnp.asarray(pos, jnp.int32))
+        toks.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    assert req.out_tokens == toks
