@@ -1,12 +1,22 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, JSON baseline."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import numpy as np
 
 ROWS = []
+JSON_ROWS = []
+
+# Reference VPU clock for the cycles/byte-equivalent derivation (v5e VPU,
+# matches the roofline statements in kernels_bench). On CPU this is an
+# *equivalent* -- a device-independent way to track the perf trajectory.
+REF_HZ = 940e6
+
+# Set by run.py --fast: benches shrink sizes/repeats for the CI smoke path.
+FAST = False
 
 
 def timeit(fn, *args, repeats=5, inner=3, warmup=2):
@@ -26,9 +36,34 @@ def timeit(fn, *args, repeats=5, inner=3, warmup=2):
     return best
 
 
-def row(name: str, us_per_call: float, derived: str = ""):
+def row(name: str, us_per_call: float, derived: str = "", n_bytes: int | None = None):
+    """Emit one CSV row and collect the machine-readable JSON twin.
+
+    n_bytes (input bytes hashed per call) unlocks the throughput fields:
+    bytes_per_s and cycles_per_byte_equiv (at REF_HZ).
+    """
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}")
+    entry = {
+        "name": name,
+        "us_per_call": round(float(us_per_call), 3),
+        "derived": derived,
+        "bytes_per_s": None,
+        "cycles_per_byte_equiv": None,
+    }
+    if n_bytes and us_per_call > 0:
+        secs = us_per_call * 1e-6
+        entry["bytes_per_s"] = round(n_bytes / secs, 1)
+        entry["cycles_per_byte_equiv"] = round(secs * REF_HZ / n_bytes, 4)
+    JSON_ROWS.append(entry)
+
+
+def write_json(path: str) -> None:
+    """Persist the collected rows as the machine-readable bench baseline."""
+    with open(path, "w") as f:
+        json.dump({"schema": "bench-v1", "ref_hz": REF_HZ, "fast": FAST,
+                   "rows": JSON_ROWS}, f, indent=1)
+    print(f"# wrote {len(JSON_ROWS)} rows -> {path}")
 
 
 def ns_per_byte(seconds: float, n_bytes: int) -> float:

@@ -9,18 +9,20 @@ import numpy as np
 
 from repro.core import keys as keymod
 from repro.kernels import ops as kops
+from . import common
 from .common import row, timeit
 
 
 def run():
-    B, N = 8, 4096
+    B, N = (4, 1024) if common.FAST else (8, 4096)
     kb = keymod.KeyBuffer(seed=9)
     hi, lo = map(jnp.asarray, kb.hi_lo(N + 1))
     rng = np.random.Generator(np.random.Philox(key=np.uint64(7)))
     toks = jnp.asarray(rng.integers(0, 2**32, size=(B, N), dtype=np.uint64).astype(np.uint32))
     t = timeit(lambda: kops.multilinear_hash(toks, hi, lo, backend="interpret"),
-               repeats=2, inner=1, warmup=1)
-    row("kernels/multilinear/interpret", t * 1e6, "correctness path (Python exec)")
+               repeats=1 if common.FAST else 2, inner=1, warmup=1)
+    row("kernels/multilinear/interpret", t * 1e6,
+        "correctness path (Python exec)", n_bytes=B * N * 4)
     for bb, bn in ((8, 512), (8, 1024)):
         vmem = (bb * bn * 4 + 2 * bn * 4 + bb * 8) / 1024
         row(f"kernels/vmem-model/b{bb}x{bn}", 0.0,

@@ -1,0 +1,84 @@
+"""Fused multi-hash engine bench: batched k-probe Bloom vs the seed's
+host-numpy per-item/per-probe loop, plus engine backend sweep.
+
+The acceptance bar for the fused engine: interpret-mode batched admission
+(one launch, kernel body in Python) must beat the seed Bloom path (Python
+loop over items x probes with per-probe key-window regeneration) on a
+4096-item batch. The jnp-backend row is the actual CPU production path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hostref
+from repro.core.keys import KeyBuffer
+from repro.data.dedup import BloomFilter
+
+from . import common
+from .common import row, timeit
+
+
+def _seed_bloom_indices(item: np.ndarray, kb: KeyBuffer, k: int, m: int):
+    """The seed BloomFilter._indices, verbatim: O(k*n) key regeneration and
+    a Python loop per probe, per item."""
+    item = np.atleast_1d(item).astype(np.uint32)
+    idx = np.empty(k, np.int64)
+    for j in range(k):
+        keys = kb.u64((j + 1) * (len(item) + 1))[j * (len(item) + 1):]
+        h = int(hostref.multilinear_np_u64(item, keys))
+        idx[j] = h % m
+    return idx
+
+
+def run():
+    fast = common.FAST
+    B = 512 if fast else 4096
+    L = 16
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(0xB10C)))
+    items = [rng.integers(0, 2**32, size=L, dtype=np.uint64).astype(np.uint32)
+             for _ in range(B)]
+    n_bytes = B * L * 4
+
+    bf = BloomFilter(n_items=B, fp_rate=1e-3)
+    k, m = bf.k, bf.m
+    kb = KeyBuffer(seed=0xB100)
+
+    def host_loop():
+        for it in items:
+            _seed_bloom_indices(it, kb, k, m)
+
+    t_host = timeit(host_loop, repeats=1 if fast else 2, inner=1, warmup=1)
+    row(f"multihash/bloom{B}x{k}probe/host-loop-seed", t_host * 1e6,
+        "seed path: per-item per-probe numpy loop", n_bytes=n_bytes)
+
+    for backend in ("interpret", "jnp"):
+        t = timeit(lambda be=backend: bf._hashes(items, backend=be),
+                   repeats=1 if fast else 3, inner=1, warmup=1)
+        speed = t_host / t
+        row(f"multihash/bloom{B}x{k}probe/fused-{backend}", t * 1e6,
+            f"one launch; speedup x{speed:.1f} vs seed host loop",
+            n_bytes=n_bytes)
+
+    # K-scaling of the fused engine (token bytes read once for all K)
+    from repro.core.keys import MultiKeyBuffer
+    from repro.core.ops import hash_tokens_device_multi
+
+    toks = np.stack(items)
+    for K in (1, 4, 8):
+        mkb = MultiKeyBuffer(seed=0xE7A, n_hashes=K)
+        t = timeit(
+            lambda mkb=mkb: hash_tokens_device_multi(
+                toks, keys=mkb, family="multilinear", backend="jnp"),
+            repeats=1 if fast else 3, inner=1, warmup=1)
+        row(f"multihash/kscale/B{B}xK{K}/jnp", t * 1e6,
+            f"{K} hash fns, one pass", n_bytes=n_bytes)
+
+    # autotuner: sweep tiny interpret problem so the bench also exercises
+    # the cached best-of table end to end (and records what it picked)
+    from repro.kernels import autotune as ktune
+
+    res = ktune.sweep("multilinear", B=8, N=32, K=2, backend="interpret",
+                      candidates=[(4, 16), (8, 32)], repeats=1)
+    best = min(res, key=res.get)
+    row("multihash/autotune/interpret-sweep", res[best] * 1e6,
+        f"best block_b x block_n = {best[0]}x{best[1]} of {len(res)} candidates")

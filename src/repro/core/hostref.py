@@ -44,6 +44,72 @@ def multilinear_np_u64(tokens: np.ndarray, keys_u64: np.ndarray) -> np.ndarray:
         return keys_u64[0] + (k * s).sum(axis=-1, dtype=U64)
 
 
+def encode_lengths(lengths, n: int, variable_length: bool, batch: int) -> np.ndarray:
+    """(batch,) int32 per-row length codes consumed by every multi-hash backend.
+
+    code >= 0: variable-length row of L tokens -- mask tokens beyond L, place
+      the paper's append-1 sentinel at position L, keep keys live through
+      even(L+1) (so HM's odd-pad zero slot keeps its real key, DESIGN.md §3).
+    code < 0 (encoded as -(n+1)): fixed-length row -- no sentinel, tokens
+      masked beyond n, keys live through even(n).
+    """
+    if not variable_length:
+        if lengths is not None:
+            raise ValueError("lengths only apply with variable_length=True")
+        return np.full(batch, -(n + 1), np.int32)
+    if lengths is None:
+        return np.full(batch, n, np.int32)
+    lens = np.asarray(lengths, np.int64)
+    if lens.shape != (batch,):
+        raise ValueError(f"lengths shape {lens.shape} != ({batch},)")
+    if (lens < 0).any() or (lens > n).any():
+        raise ValueError(f"lengths must be in [0, {n}]")
+    return lens.astype(np.int32)
+
+
+def _mask_multi(s: np.ndarray, lens: np.ndarray):
+    """(tok_eff u64 (B,N), live bool (B,N)) under the encode_lengths code."""
+    B, N = s.shape
+    col = np.arange(N, dtype=np.int64)[None, :]
+    lens = lens.astype(np.int64)[:, None]
+    is_var = lens >= 0
+    lm = np.where(is_var, lens, -lens - 1)
+    tok_eff = np.where(col < lm, s, np.where(is_var & (col == lm), 1, 0)).astype(U64)
+    end = lm + is_var
+    kend = end + (end & 1)  # ceil to even: HM pairs never straddle the mask
+    return tok_eff, col < kend
+
+
+def multilinear_multi_np(tokens: np.ndarray, lens: np.ndarray,
+                         keys_u64: np.ndarray, family: str = "multilinear") -> np.ndarray:
+    """K independent hashes of each row in one vectorized numpy pass.
+
+    tokens: (B, N) uint32 (zero-padded); lens: (B,) int32 length codes
+    (`encode_lengths`); keys_u64: (K, >= N+1) with m1 at column 0.
+    Returns (B, K) uint64 full accumulators (>>32 for the 32-bit hash).
+
+    This is the ground-truth oracle for the fused multi-hash kernel AND the
+    single-item fast path (the k key windows are cached, one numpy pass --
+    no per-probe key regeneration).
+    """
+    with np.errstate(over="ignore"):
+        s = np.asarray(tokens).astype(U64)
+        B, N = s.shape
+        tok_eff, live = _mask_multi(s, lens)
+        k = np.where(live[None, :, :], keys_u64[:, None, 1 : N + 1], U64(0))
+        if family in ("multilinear", "multilinear_2x2"):
+            acc = (k * tok_eff[None, :, :]).sum(axis=-1, dtype=U64)
+        elif family == "multilinear_hm":
+            if N % 2:
+                raise ValueError("HM needs even padded N")
+            a = k[..., 0::2] + tok_eff[None, :, 0::2]
+            b = k[..., 1::2] + tok_eff[None, :, 1::2]
+            acc = (a * b).sum(axis=-1, dtype=U64)
+        else:
+            raise ValueError(family)
+        return (keys_u64[:, 0][:, None] + acc).T
+
+
 def python_int_oracle(tokens, keys, hm: bool = False) -> int:
     """Arbitrary-precision ground truth (mod 2^64 made explicit)."""
     mod = 1 << 64

@@ -83,3 +83,68 @@ class KeyBuffer:
         inter[1::2] = flat_hi
         words[:] = inter[: (n_ops + 1) * nlimbs].reshape(n_ops + 1, nlimbs)
         return words
+
+
+_GOLDEN64 = 0x9E3779B97F4A7C15  # splitmix/Fibonacci increment for stream derivation
+
+
+def derive_stream_seed(seed: int, j: int) -> int:
+    """Seed of the j-th independent key stream for base `seed` (j=0 -> seed).
+
+    Stream 0 is the base KeyBuffer's own Philox stream, so K=1 users see the
+    exact keys a plain ``KeyBuffer(seed)`` would produce; streams j>0 are
+    distinct counter-based streams, never overlapping windows of one stream
+    (the seed BloomFilter's overlapping-window construction regenerated
+    O(k*n) keys per lookup AND made key values depend on item length).
+    """
+    return (int(seed) ^ (j * _GOLDEN64)) % (1 << 64)
+
+
+class MultiKeyBuffer:
+    """K independent growable key streams = K independent hash functions.
+
+    Each stream follows the paper's convention: u64[0] is m1, u64[1:] are the
+    positional keys. All windows are materialized once at construction and
+    grown on demand (amortized doubling via KeyBuffer), so per-lookup key
+    regeneration is gone entirely.
+
+    `seeds` gives explicit per-stream base seeds (e.g. the data pipeline's
+    dedup/split/shard salts fused into one engine pass); otherwise streams
+    are derived from `seed` via `derive_stream_seed`.
+    """
+
+    def __init__(self, seed: int = 0x5EED, n_hashes: int = 1,
+                 seeds: "list[int] | None" = None, initial: int = 256):
+        if seeds is not None:
+            self.seeds = [int(s) for s in seeds]
+        else:
+            self.seeds = [derive_stream_seed(seed, j) for j in range(n_hashes)]
+        self.buffers = [KeyBuffer(seed=s, initial=initial) for s in self.seeds]
+        # streams are append-only pure functions of (seed, i), so a stacked
+        # prefix of width n is immutable: memoize per n (widths are pow2-
+        # bucketed by the engine, so this stays a handful of entries)
+        self._stacked: dict[int, np.ndarray] = {}
+        self._planes: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+    @property
+    def n_hashes(self) -> int:
+        return len(self.buffers)
+
+    def stacked_u64(self, n: int) -> np.ndarray:
+        """(K, n) uint64: row j = first n keys of stream j (m1 at column 0)."""
+        out = self._stacked.get(n)
+        if out is None:
+            out = np.stack([kb.u64(n) for kb in self.buffers])
+            out.setflags(write=False)  # shared across callers
+            self._stacked[n] = out
+        return out
+
+    def planes(self, n: int):
+        """(hi, lo) uint32 (K, n) planes of `stacked_u64(n)`."""
+        out = self._planes.get(n)
+        if out is None:
+            hi, lo = split_hi_lo(self.stacked_u64(n))
+            hi.setflags(write=False)
+            lo.setflags(write=False)
+            out = self._planes[n] = (hi, lo)
+        return out

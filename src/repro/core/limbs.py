@@ -98,8 +98,7 @@ def mul64_low(a, b):
     """Low 64 bits of (a_hi,a_lo) * (b_hi,b_lo).
 
     = full(a_lo,b_lo) + ((a_lo*b_hi + a_hi*b_lo) << 32).
-    3 full-width + 2 low multiplies -> 14 native 32-bit multiplies... no:
-    1 full (4 muls) + 2 low (2 muls) = 6 native multiplies.
+    1 full (4 muls) + 2 low (2 muls) = 6 native 32-bit multiplies.
     """
     a_hi, a_lo = a
     b_hi, b_lo = b
@@ -139,10 +138,6 @@ def u64_to_numpy(a):
 # Generic little-endian multi-limb ops (K = 32*n bits), for §3.2/§5.5.
 # ---------------------------------------------------------------------------
 
-def mw_zero(nlimbs, shape=()):
-    return tuple(jnp.zeros(shape, U32) for _ in range(nlimbs))
-
-
 def mw_add(a, b):
     """Multiword add mod 2^(32n). a, b tuples of n uint32 limbs (LE)."""
     n = len(a)
@@ -177,7 +172,6 @@ def mw_mul(a, b):
     analysis, reproduced on TPU limb arithmetic.
     """
     n = len(a)
-    acc = list(mw_zero(n, a[0].shape if hasattr(a[0], "shape") else ()))
     acc = [jnp.zeros_like(a[0]) for _ in range(n)]
     for i in range(n):
         carry = jnp.zeros_like(a[0])

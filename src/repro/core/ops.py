@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import baselines, gf, hostref, multilinear
-from .keys import KeyBuffer
+from .keys import KeyBuffer, MultiKeyBuffer
 
 _DEFAULT_SEED = 0x1E53  # "LEKA" -- Lemire/Kaser
 
@@ -100,6 +100,128 @@ def hash_tokens_device(
     return fam.device_fn(tokens, jnp.asarray(hi), jnp.asarray(lo))
 
 
+def _even(n: int) -> int:
+    return n + (n & 1)
+
+
+def _stack_ragged(tokens):
+    """Normalize tokens to (B, N) uint32 + per-row lengths (or None if the
+    input was already a dense 2-D batch)."""
+    if isinstance(tokens, (list, tuple)):
+        rows = [np.atleast_1d(np.asarray(r)).astype(np.uint32) for r in tokens]
+        n = max((len(r) for r in rows), default=0)
+        out = np.zeros((len(rows), n), np.uint32)
+        for i, r in enumerate(rows):
+            out[i, : len(r)] = r
+        return out, np.asarray([len(r) for r in rows], np.int64)
+    arr = np.atleast_2d(np.asarray(tokens)).astype(np.uint32)
+    return arr, None
+
+
+def hash_tokens_device_multi(
+    tokens,
+    n_hashes: int | None = None,
+    *,
+    family: str = "multilinear",
+    keys: MultiKeyBuffer | None = None,
+    seed: int | None = None,
+    variable_length: bool = True,
+    lengths=None,
+    backend: str | None = None,
+    out_bits: int = 32,
+    block_b: int | None = None,
+    block_n: int | None = None,
+    autotune: bool = False,
+) -> np.ndarray:
+    """Batched multi-hash: K independent hashes of every row in ONE pass.
+
+    The system's main hash entry point (DESIGN.md §3): a (B, N) token batch
+    -- or a ragged list of 1-D rows -- is hashed by `n_hashes` independent
+    functions (disjoint key streams, see `MultiKeyBuffer`) in a single
+    fused kernel/jit launch. Variable-length policy (the paper's append-1),
+    the m1 add, and the final >>32 all happen inside the launch.
+
+    backend: 'pallas' (TPU kernel), 'interpret' (kernel body on CPU),
+      'jnp' (fused XLA oracle -- default off-TPU), 'host' (vectorized numpy
+      uint64; bit-identical, no jit -- the single-item fast path).
+    out_bits: 32 -> (B, K) uint32 (paper hash); 64 -> (B, K) uint64 full
+      accumulators (fingerprint/dedup consumers).
+    Every non-host call issues exactly one launch (`kernels.ops.launch_count`).
+    """
+    if family not in FAMILIES:
+        raise KeyError(family)
+    toks, ragged_lens = _stack_ragged(tokens)
+    if lengths is None:
+        if ragged_lens is not None and not variable_length:
+            raise ValueError(
+                "ragged input requires variable_length=True (fixed-length "
+                "semantics are ambiguous for rows of different lengths); "
+                "pass a dense (B, N) array for fixed-length hashing")
+        lengths = ragged_lens
+    B, N = toks.shape
+    mkb = keys or MultiKeyBuffer(
+        seed=_DEFAULT_SEED if seed is None else seed, n_hashes=n_hashes or 1)
+    K = mkb.n_hashes
+    if n_hashes is not None and n_hashes != K:
+        raise ValueError(f"n_hashes={n_hashes} != key buffer's {K}")
+    if backend is None:
+        import jax
+
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+    # Padded width: room for the sentinel + the HM even-pad (DESIGN.md §3).
+    n_req = _even(N + 2) if variable_length else _even(N)
+    lens = hostref.encode_lengths(lengths, N, variable_length, B)
+
+    from ..kernels import autotune as ktune
+
+    if backend == "host":
+        # same pow2 width bucketing as the device path: keeps the key
+        # buffer's per-width memo bounded under ragged streaming (pow2 is
+        # even, so the HM pairing constraint holds)
+        n_h = ktune.pow2_at_least(n_req)
+        toks_h = np.zeros((B, n_h), np.uint32)
+        toks_h[:, :N] = toks
+        acc = hostref.multilinear_multi_np(
+            toks_h, lens, mkb.stacked_u64(n_h + 1), family=family)
+        if out_bits == 64:
+            return acc
+        return (acc >> np.uint64(32)).astype(np.uint32)
+
+    from ..kernels import ops as kops
+
+    if block_b is None or block_n is None:
+        # measure only on explicit opt-in: a default call must never block
+        # on a compile+time sweep (best_blocks still consults the persisted
+        # cache, so tuned processes get measured shapes for free)
+        bb, bn = ktune.best_blocks(family, B, n_req, K, backend,
+                                   measure=bool(autotune))
+        block_b = block_b or bb
+        block_n = block_n or bn
+    # Bucket padded shapes to powers of two of blocks so ragged workloads
+    # hit a bounded jit cache instead of recompiling per batch shape
+    # (same pow2 bucketing as the autotune cache keys -- single helper).
+    Bp = block_b * ktune.pow2_at_least(-(-B // block_b))
+    Np = block_n * ktune.pow2_at_least(-(-n_req // block_n))
+    toks_p = np.zeros((Bp, Np), np.uint32)
+    toks_p[:B, :N] = toks
+    lens_p = np.full(Bp, -(Np + 1) if not variable_length else 0, np.int32)
+    lens_p[:B] = lens
+    kh, kl = mkb.planes(Np + 1)
+    m1 = np.stack([kh[:, 0], kl[:, 0]], axis=1)
+
+    import jax.numpy as jnp
+
+    out = np.asarray(kops.multihash(
+        jnp.asarray(toks_p), jnp.asarray(kh[:, 1:]), jnp.asarray(kl[:, 1:]),
+        jnp.asarray(lens_p), jnp.asarray(m1),
+        family=family, block_b=block_b, block_n=block_n, backend=backend,
+    ))[:B]
+    if out_bits == 64:
+        return (out[:, :, 0].astype(np.uint64) << np.uint64(32)) | out[:, :, 1]
+    return out[:, :, 0]
+
+
 def fingerprint_bytes(data: bytes, keys: KeyBuffer | None = None, chunk_words: int = 1 << 16) -> int:
     """64-bit Multilinear fingerprint of a byte string (checkpoint integrity).
 
@@ -131,12 +253,29 @@ def fingerprint_bytes(data: bytes, keys: KeyBuffer | None = None, chunk_words: i
     return int(hostref.multilinear_np_u64(words, kb.u64(len(words) + 1)))
 
 
-def shard_assignment(tokens: np.ndarray, n_shards: int, salt: int = 0) -> np.ndarray:
+_SHARD_KEYS: dict[int, MultiKeyBuffer] = {}
+_SHARD_KEYS_MAX = 16  # bound the per-salt cache (rotating salts must not leak)
+
+
+def shard_assignment(tokens: np.ndarray, n_shards: int, salt: int = 0,
+                     backend: str | None = None) -> np.ndarray:
     """Deterministic shard id per row of (..., n) tokens.
 
     Uniformity of the strongly universal family ensures balanced shards in
-    expectation -- this is the paper-§1 "uniformity" property doing real work.
+    expectation -- this is the paper-§1 "uniformity" property doing real
+    work. Routed through the fused multi-hash engine: one launch per batch
+    (the key buffer per salt is cached process-wide).
     """
-    kb = KeyBuffer(seed=_DEFAULT_SEED ^ (salt * 0x9E3779B97F4A7C15 % (1 << 63)))
-    h = hash_tokens_host(tokens, family="multilinear_hm", keys=kb)
-    return (h % np.uint32(n_shards)).astype(np.int32)
+    seed = _DEFAULT_SEED ^ (salt * 0x9E3779B97F4A7C15 % (1 << 63))
+    mkb = _SHARD_KEYS.get(seed)
+    if mkb is None:
+        mkb = _SHARD_KEYS[seed] = MultiKeyBuffer(seed=seed, n_hashes=1)
+        while len(_SHARD_KEYS) > _SHARD_KEYS_MAX:  # evict oldest-inserted salt
+            _SHARD_KEYS.pop(next(k for k in _SHARD_KEYS if k != seed))
+    arr = np.atleast_2d(np.asarray(tokens, np.uint32))
+    batch_shape = arr.shape[:-1]
+    h = hash_tokens_device_multi(
+        arr.reshape(-1, arr.shape[-1]), keys=mkb, family="multilinear_hm",
+        variable_length=True, backend=backend)[:, 0]
+    out = (h % np.uint32(n_shards)).astype(np.int32).reshape(batch_shape)
+    return out if np.asarray(tokens).ndim > 1 else out[0]

@@ -2,59 +2,116 @@
 
 The Bloom filter's k index functions are k independent MULTILINEAR hashes
 (strong universality => the standard false-positive analysis holds with
-exact constants, not heuristics)."""
+exact constants, not heuristics).
+
+All k key streams are materialized once at construction (`MultiKeyBuffer`)
+-- the seed implementation regenerated O(k*n) keys per lookup by slicing
+overlapping windows out of one stream. Batch admission (`add_batch` /
+`contains_batch` / `check_and_add_batch`) routes every item through ONE
+fused multi-hash launch (DESIGN.md §3); single-item calls use the
+bit-identical vectorized host path over the same cached windows.
+"""
 from __future__ import annotations
 
 import math
 
 import numpy as np
 
-from ..core import hostref
-from ..core.keys import KeyBuffer
+from ..core.keys import MultiKeyBuffer
+from ..core.ops import hash_tokens_device_multi
 
 
 class BloomFilter:
-    def __init__(self, n_items: int, fp_rate: float = 1e-3, seed: int = 0xB100):
+    """k-probe Bloom filter over variable-length token strings.
+
+    Probe indices are the full 64-bit accumulators mod m (as in the seed
+    implementation): modulo bias is ~m/2^64, so the textbook false-positive
+    constants hold even when m approaches 2^32.
+    """
+
+    def __init__(self, n_items: int, fp_rate: float = 1e-3, seed: int = 0xB100,
+                 backend: str | None = None):
         self.m = max(64, int(-n_items * math.log(fp_rate) / (math.log(2) ** 2)))
         self.k = max(1, int(self.m / n_items * math.log(2)))
         self.bits = np.zeros((self.m + 63) // 64, np.uint64)
-        # k independent hash functions = k disjoint key windows
-        self.kb = KeyBuffer(seed=seed)
+        self.backend = backend
+        # k independent hash functions = k key streams, cached for life
+        self.mkb = MultiKeyBuffer(seed=seed, n_hashes=self.k)
+
+    def _hashes(self, items, backend=None) -> np.ndarray:
+        """(B, k) uint64 accumulators -- ONE fused launch for the whole batch."""
+        return hash_tokens_device_multi(
+            items, keys=self.mkb, family="multilinear", out_bits=64,
+            variable_length=True, backend=backend or self.backend)
 
     def _indices(self, item: np.ndarray) -> np.ndarray:
-        item = np.atleast_1d(item).astype(np.uint32)
-        idx = np.empty(self.k, np.int64)
-        for j in range(self.k):
-            keys = self.kb.u64((j + 1) * (len(item) + 1))[j * (len(item) + 1):]
-            h = int(hostref.multilinear_np_u64(item, keys))
-            idx[j] = h % self.m
-        return idx
+        """(k,) probe indices for one item (vectorized host path: same
+        values as the batched device path, no per-probe key work)."""
+        h = self._hashes([np.atleast_1d(item)], backend="host")[0]
+        return (h % np.uint64(self.m)).astype(np.int64)
+
+    def _set(self, idx: np.ndarray) -> None:
+        np.bitwise_or.at(self.bits, idx // 64,
+                         np.uint64(1) << (idx.astype(np.uint64) % np.uint64(64)))
+
+    def _test(self, idx: np.ndarray) -> np.ndarray:
+        word = self.bits[idx // 64] >> (idx.astype(np.uint64) % np.uint64(64))
+        return (word & np.uint64(1)).astype(bool)
 
     def add(self, item) -> None:
-        for i in self._indices(item):
-            self.bits[i // 64] |= np.uint64(1) << np.uint64(i % 64)
+        self._set(self._indices(item))
 
     def __contains__(self, item) -> bool:
-        return all(
-            (self.bits[i // 64] >> np.uint64(i % 64)) & np.uint64(1)
-            for i in self._indices(item)
-        )
+        return bool(self._test(self._indices(item)).all())
+
+    def add_batch(self, items) -> None:
+        """Admit a batch of items with a single k-probe hash launch."""
+        if len(items) == 0:
+            return
+        idx = (self._hashes(items) % np.uint64(self.m)).astype(np.int64)
+        self._set(idx.ravel())
+
+    def contains_batch(self, items) -> np.ndarray:
+        """(B,) bool membership for a batch -- one launch, no Python loops."""
+        if len(items) == 0:
+            return np.zeros(0, bool)
+        idx = (self._hashes(items) % np.uint64(self.m)).astype(np.int64)
+        return self._test(idx.ravel()).reshape(idx.shape).all(axis=1)
 
 
 class ExactDedup:
     """64-bit fingerprint set. Collision probability for N docs is
     ~N^2 / 2^65 (strong universality): negligible below ~10^8 docs."""
 
-    def __init__(self, seed: int = 0xDED0):
-        self.kb = KeyBuffer(seed=seed)
+    def __init__(self, seed: int = 0xDED0, backend: str | None = None):
+        self.mkb = MultiKeyBuffer(seed=seed, n_hashes=1)
+        self.backend = backend
         self.seen: set[int] = set()
+
+    def _fingerprints(self, items, backend=None) -> np.ndarray:
+        """(B,) uint64 variable-length fingerprints, one launch per batch
+        (bit-identical to the seed's append-1 numpy formula)."""
+        return hash_tokens_device_multi(
+            items, keys=self.mkb, family="multilinear", variable_length=True,
+            out_bits=64, backend=backend or self.backend)[:, 0]
 
     def check_and_add(self, tokens: np.ndarray) -> bool:
         """True if new (admitted), False if duplicate."""
-        t = np.atleast_1d(tokens).astype(np.uint32)
-        t = np.concatenate([t, np.ones(1, np.uint32)])
-        fp = int(hostref.multilinear_np_u64(t, self.kb.u64(len(t) + 1)))
+        fp = int(self._fingerprints([np.atleast_1d(tokens)], backend="host")[0])
         if fp in self.seen:
             return False
         self.seen.add(fp)
         return True
+
+    def check_and_add_batch(self, items) -> np.ndarray:
+        """(B,) bool admission mask; duplicates WITHIN the batch keep only
+        their first occurrence. One hash launch for the whole batch."""
+        if len(items) == 0:
+            return np.zeros(0, bool)
+        fps = self._fingerprints(items)
+        out = np.zeros(len(fps), bool)
+        for i, fp in enumerate(map(int, fps)):
+            if fp not in self.seen:
+                self.seen.add(fp)
+                out[i] = True
+        return out

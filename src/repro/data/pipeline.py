@@ -5,8 +5,11 @@ Every routing decision is a strongly universal hash of the *content*:
   - shard assignment:   h(doc) mod n_shards        (uniform loads: §1)
   - global shuffle:     sort by salted h(doc)      (reproducible epochs)
   - dedup:              64-bit fingerprint set / Bloom filter
-All hashing is MULTILINEAR-HM on the host (numpy-u64 fast path); the salt
-folds the epoch so each epoch is an independent permutation.
+All three routing hashes (dedup fingerprint, split, shard) are independent
+MULTILINEAR functions evaluated as ONE K=3 pass through the fused multi-hash
+engine (DESIGN.md §3): `admit_batch` hashes a whole batch of documents in a
+single launch; `admit` uses the bit-identical vectorized host path, so
+streaming and batched admission route every document the same way.
 """
 from __future__ import annotations
 
@@ -15,9 +18,13 @@ from typing import Iterator
 
 import numpy as np
 
-from ..core import hostref
-from ..core.keys import KeyBuffer
-from ..core.ops import hash_tokens_host
+from ..core.keys import KeyBuffer, MultiKeyBuffer
+from ..core.ops import hash_tokens_device_multi, hash_tokens_host
+
+# Per-purpose base seeds for the fused triple (stream order: fp, split, shard)
+_FP_SEED = 0xF1F0
+_SPLIT_SEED = 0xDA7A ^ 0x5EA7
+_SHARD_SEED = 0xDA7A ^ 0x511A
 
 
 @dataclasses.dataclass
@@ -33,50 +40,70 @@ class PipelineConfig:
     vocab_size: int = 50000
 
 
-def _doc_hash(doc_tokens: np.ndarray, salt: int = 0) -> np.ndarray:
-    kb = KeyBuffer(seed=0xDA7A ^ salt)
-    return hash_tokens_host(doc_tokens, family="multilinear_hm", keys=kb)
-
-
 class HashPipeline:
     """Deterministic, shardable, dedup'ing token pipeline.
 
     Documents stream in as (doc_id, token array); out come packed
-    (tokens, labels, mask) batches for this shard. Entirely host-side;
-    every decision is reproducible from content + salt alone (no state to
-    checkpoint beyond the stream position).
+    (tokens, labels, mask) batches for this shard. Every decision is
+    reproducible from content + salt alone (no state to checkpoint beyond
+    the stream position), and every document costs exactly one 3-function
+    hash evaluation -- fused into one launch per batch in `admit_batch`.
     """
 
     def __init__(self, cfg: PipelineConfig):
         self.cfg = cfg
         self.seen_fingerprints: set[int] = set()
+        # fp / split / shard as one fused 3-hash key set
+        self.route_keys = MultiKeyBuffer(
+            seeds=[_FP_SEED, _SPLIT_SEED, _SHARD_SEED])
         self.stats = {"docs": 0, "dup": 0, "eval": 0, "other_shard": 0, "kept": 0}
 
-    def admit(self, tokens: np.ndarray) -> str:
-        """Route one document: 'train' | 'eval' | 'dup' | 'other_shard'."""
-        self.stats["docs"] += 1
+    def _route_hashes(self, docs, backend: str | None = None) -> np.ndarray:
+        """(B, 3) uint64 (fingerprint, split, shard) -- one launch/batch.
+
+        The fingerprint keeps all 64 accumulator bits; split/shard decisions
+        must use only the high 32 (`>> 32` in _route_one): strong
+        universality (Thm 3.1) holds for the finished hash, not the raw
+        accumulator's low bits.
+        """
+        return hash_tokens_device_multi(
+            docs, keys=self.route_keys, family="multilinear",
+            variable_length=True, out_bits=64, backend=backend)
+
+    def _route_one(self, fp: int, h_split: int, h_shard: int) -> str:
         c = self.cfg
-        padded = _pad_even(tokens)
         if c.dedup:
-            kb = KeyBuffer(seed=0xF1F0)
-            fp = int(hostref.multilinear_np_u64(
-                _append_one(padded), kb.u64(len(padded) + 2)))
             if fp in self.seen_fingerprints:
                 self.stats["dup"] += 1
                 return "dup"
             self.seen_fingerprints.add(fp)
-        h_split = int(_doc_hash(tokens, salt=0x5EA7)[()] if tokens.ndim == 1
-                      else _doc_hash(tokens, salt=0x5EA7))
         if h_split % 100 < c.eval_pct:
             self.stats["eval"] += 1
             return "eval"
-        if c.n_shards > 1:
-            h_shard = int(_doc_hash(tokens, salt=0x511A)[()])
-            if h_shard % c.n_shards != c.shard_id:
-                self.stats["other_shard"] += 1
-                return "other_shard"
+        if c.n_shards > 1 and h_shard % c.n_shards != c.shard_id:
+            self.stats["other_shard"] += 1
+            return "other_shard"
         self.stats["kept"] += 1
         return "train"
+
+    def admit(self, tokens: np.ndarray) -> str:
+        """Route one document: 'train' | 'eval' | 'dup' | 'other_shard'."""
+        self.stats["docs"] += 1
+        h = self._route_hashes([np.atleast_1d(tokens)], backend="host")[0]
+        return self._route_one(int(h[0]), int(h[1]) >> 32, int(h[2]) >> 32)
+
+    def admit_batch(self, docs) -> list[str]:
+        """Route a batch of documents with ONE fused 3-hash launch.
+
+        Bit-identical to per-document `admit` (duplicates within the batch
+        are caught in arrival order); stats update as if streamed.
+        """
+        if len(docs) == 0:
+            return []
+        hashes = self._route_hashes(list(docs))
+        self.stats["docs"] += len(docs)
+        return [self._route_one(int(h[0]), int(h[1]) >> 32, int(h[2]) >> 32)
+                for h in hashes]
 
     def epoch_order(self, doc_hashes: np.ndarray, epoch: int) -> np.ndarray:
         """Reproducible global shuffle: argsort of salted re-hash."""
@@ -109,11 +136,3 @@ class HashPipeline:
                     rows = []
 
 
-def _append_one(tokens: np.ndarray) -> np.ndarray:
-    return np.concatenate([tokens.astype(np.uint32), np.ones(1, np.uint32)])
-
-
-def _pad_even(tokens: np.ndarray) -> np.ndarray:
-    if len(tokens) % 2 == 0:
-        return tokens
-    return np.concatenate([tokens, np.zeros(1, tokens.dtype)])

@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the paper's hot spot: batched Multilinear hashing.
 
 multilinear.py  -- integer families (MULTILINEAR / -HM), limb arithmetic
+multihash.py    -- fused K-function engine (k-probe Bloom / fingerprints /
+                   routing in one launch; variable-length + m1 + >>32 fused)
 gf_multilinear.py -- GF(2^32) carry-less families (no CLMUL on TPU: §5.4)
+autotune.py     -- block-shape sweep with persisted best-of table
 ops.py          -- jit wrappers (padding, m1, >>32, backend dispatch)
 ref.py          -- pure-jnp oracles of record
 """
-from . import gf_multilinear, multilinear, ops, ref  # noqa: F401
-from .ops import gf_hash, hash_tokens_batched, multilinear_hash  # noqa: F401
+from . import autotune, gf_multilinear, multihash, multilinear, ops, ref  # noqa: F401
+from .ops import gf_hash, hash_tokens_batched, launch_count, multilinear_hash  # noqa: F401

@@ -1,0 +1,163 @@
+"""Block-shape autotuner for the fused multi-hash kernel.
+
+Sweeps (block_b, block_n) candidates on synthetic data, caches the best
+shape per problem-size bucket, and persists the table to JSON so a serving
+process warms up from disk instead of re-sweeping (DESIGN.md §4).
+
+Interpret-safe: the sweep runs the kernel body in Python on CPU (one
+repeat, tiny problem) without crashing -- useful for CI plumbing tests --
+but interpret timings say nothing about TPU, so `best_blocks` only
+*measures* when the backend is 'pallas' (or when forced); on CPU backends
+it returns heuristic defaults (big row blocks for interpret, where the
+Python grid loop dominates; the jnp backend ignores block shapes entirely
+except for padding).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+# (block_b, block_n) sweep grid: bn spans the VMEM-vs-grid-overhead
+# trade-off (all even, <= 2^16 for the digit trick), bb spans VPU sublane
+# packing. Kept small: the cache makes the sweep a one-time cost.
+CANDIDATES = (
+    (8, 128), (8, 256), (8, 512), (8, 1024),
+    (16, 256), (16, 512), (32, 256), (64, 128),
+)
+
+_CACHE: dict[str, tuple[int, int]] = {}
+
+# Opt-in disk persistence: point this env var at a JSON file and every
+# process consults it in best_blocks and saves fresh sweep results to it.
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+
+def pow2_at_least(x: int) -> int:
+    """Next power of two >= x (exact bit arithmetic, no float log2).
+
+    Single source of truth for problem-size bucketing: the engine's shape
+    padding (core.ops) and the cache keys here MUST agree, or tuned shapes
+    would be looked up under different buckets than the ones executed.
+    """
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+def _bucket(x: int) -> int:
+    return pow2_at_least(max(1, x))
+
+
+def cache_key(family: str, B: int, N: int, K: int, backend: str) -> str:
+    return f"{backend}/{family}/K{_bucket(K)}/B{_bucket(B)}/N{_bucket(N)}"
+
+
+def default_blocks(B: int, N_req: int, backend: str) -> tuple[int, int]:
+    """Heuristic shapes when no measured entry exists.
+
+    interpret: the Python grid loop is the cost -- use the largest row block
+      so a 4096-item Bloom batch is a handful of grid steps, not 512.
+    pallas/jnp: paper-roofline default (8 sublanes, 1024-lane key stream).
+    """
+    bn_fit = max(2, N_req + (N_req & 1))
+    if backend == "interpret":
+        bb = min(_bucket(B), 1024)
+        return bb, min(_bucket(bn_fit), 4096)
+    return 8, min(_bucket(bn_fit), 1024)
+
+
+def sweep(family: str, B: int, N: int, K: int, backend: str,
+          candidates=None, repeats: int = 2, seed: int = 0xA070) -> dict:
+    """Time each candidate block shape on synthetic (B, N) x K data.
+
+    Returns {(bb, bn): seconds} for valid candidates and records the best
+    in the in-process cache. Uses the real dispatch path (kernels.ops), so
+    measured time includes padding-free steady-state execution only.
+    """
+    import jax.numpy as jnp
+
+    from ..core.keys import MultiKeyBuffer
+    from . import ops as kops
+
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(seed)))
+    mkb = MultiKeyBuffer(seed=seed, n_hashes=K)
+    results = {}
+    cands = candidates or CANDIDATES
+    for bb, bn in cands:
+        if bn % 2 or bn > (1 << 16):
+            continue
+        # measure EXACTLY the shape the engine will execute: pow2-of-blocks
+        # bucketed padding (core.ops), not bare ceil-to-block
+        Bp = bb * pow2_at_least(-(-B // bb))
+        Np = bn * pow2_at_least(-(-N // bn))
+        toks = jnp.asarray(
+            rng.integers(0, 2**32, size=(Bp, Np), dtype=np.uint64).astype(np.uint32))
+        kh, kl = mkb.planes(Np + 1)
+        m1 = jnp.asarray(np.stack([kh[:, 0], kl[:, 0]], axis=1))
+        kh, kl = jnp.asarray(kh[:, 1:]), jnp.asarray(kl[:, 1:])
+        lens = jnp.full((Bp,), -(Np + 1), jnp.int32)
+
+        def call(bb=bb, bn=bn, toks=toks, kh=kh, kl=kl, lens=lens, m1=m1):
+            return kops.multihash(toks, kh, kl, lens, m1, family=family,
+                                  block_b=bb, block_n=bn, backend=backend)
+
+        import jax
+        jax.block_until_ready(call())  # compile/warm outside the clock
+        import time
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(call())
+            best = min(best, time.perf_counter() - t0)
+        results[(bb, bn)] = best
+    if results:
+        _CACHE[cache_key(family, B, N, K, backend)] = min(results, key=results.get)
+    return results
+
+
+def best_blocks(family: str, B: int, N: int, K: int, backend: str,
+                cache_path: str | None = None, measure: bool | None = None
+                ) -> tuple[int, int]:
+    """Best known (block_b, block_n) for this problem bucket.
+
+    Resolution order: in-process cache -> `cache_path` JSON (defaulting to
+    $REPRO_AUTOTUNE_CACHE) -> sweep (only if `measure`, defaulting to
+    backend == 'pallas') -> heuristic defaults.
+    """
+    key = cache_key(family, B, N, K, backend)
+    if key in _CACHE:
+        return _CACHE[key]
+    if cache_path is None:
+        cache_path = os.environ.get(CACHE_ENV)
+    if cache_path and os.path.exists(cache_path):
+        load_cache(cache_path)
+        if key in _CACHE:
+            return _CACHE[key]
+    if measure is None:
+        measure = backend == "pallas"
+    if measure:
+        sweep(family, B, N, K, backend)
+        if cache_path:
+            save_cache(cache_path)
+        if key in _CACHE:
+            return _CACHE[key]
+    return default_blocks(B, N, backend)
+
+
+def save_cache(path: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({k: list(v) for k, v in _CACHE.items()}, f, indent=1)
+    os.replace(tmp, path)
+
+
+def load_cache(path: str) -> int:
+    with open(path) as f:
+        loaded = json.load(f)
+    for k, v in loaded.items():
+        _CACHE.setdefault(k, (int(v[0]), int(v[1])))
+    return len(loaded)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

@@ -16,10 +16,50 @@ import numpy as np
 from ..core import gf as gf_core
 from ..core import limbs
 from . import gf_multilinear as gfk
+from . import multihash as mhk
 from . import multilinear as mlk
 from . import ref
 
 U32 = jnp.uint32
+
+# Python-level dispatch counter: one increment == one device launch (pallas /
+# interpret pallas_call or one fused-jnp jit call). Tests use this to prove
+# batch consumers (Bloom admission etc.) issue exactly ONE launch per batch.
+_LAUNCHES = [0]
+
+
+def launch_count() -> int:
+    return _LAUNCHES[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("family", "block_b", "block_n", "backend")
+)
+def _multihash_jit(tokens, key_hi, key_lo, lens, m1, *, family, block_b,
+                   block_n, backend):
+    if backend == "jnp":
+        return ref.multihash_ref(tokens, key_hi, key_lo, lens, m1, family=family)
+    return mhk.multihash_blocks(
+        tokens, key_hi, key_lo, lens, m1,
+        family=family, block_b=block_b, block_n=block_n,
+        interpret=(backend == "interpret"),
+    )
+
+
+def multihash(tokens, key_hi, key_lo, lens, m1, *, family="multilinear",
+              block_b=8, block_n=1024, backend="interpret"):
+    """Fused multi-hash launch: (B, N) x (K, N) key planes -> (B, K, 2) u32.
+
+    Inputs must already be block-aligned/padded (core.ops owns padding and
+    key staging); this layer owns backend dispatch and launch accounting.
+    backend: 'pallas' (TPU), 'interpret' (kernel body on CPU), 'jnp' (fused
+    oracle -- the fast CPU production path).
+    """
+    _LAUNCHES[0] += 1
+    return _multihash_jit(
+        tokens, key_hi, key_lo, lens, m1,
+        family=family, block_b=block_b, block_n=block_n, backend=backend,
+    )
 
 
 def _pad_to(x, n, axis=-1):

@@ -7,6 +7,7 @@ match the numpy-uint64 / python-int oracles in tests/test_core_*.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import gf as gf_core
 from ..core import limbs
@@ -26,6 +27,41 @@ def multilinear_accumulate_ref(tokens, key_hi, key_lo, family="multilinear"):
         raise ValueError(family)
     hi, lo = ml._reduce_sum64((p_hi, p_lo), axis=-1)
     return jnp.stack([hi, lo], axis=-1)
+
+
+def multihash_ref(tokens, key_hi, key_lo, lens, m1, family="multilinear"):
+    """Pure-jnp oracle of the fused multi-hash kernel: (B, N) -> (B, K, 2).
+
+    Same semantics as `multihash.multihash_blocks` (length-code masking,
+    m1 add, hash32 in slot 0) with the K loop unrolled over limb-jnp ops.
+    """
+    from .multihash import _mask_tile
+
+    toks = jnp.asarray(tokens).astype(jnp.uint32)
+    B, N = toks.shape
+    K = key_hi.shape[0]
+    # one "tile" spanning the whole array (j=0) -> same masking algebra as
+    # the kernel, single source of truth
+    tok_eff, live = _mask_tile(toks, jnp.asarray(lens), jnp.int32(0))
+    outs = []
+    for k in range(K):
+        kh = jnp.where(live, key_hi[k][None, :], np.uint32(0))
+        kl = jnp.where(live, key_lo[k][None, :], np.uint32(0))
+        if family in ("multilinear", "multilinear_2x2"):
+            p_hi, p_lo = limbs.mul64_u32((kh, kl), tok_eff)
+        elif family == "multilinear_hm":
+            a = limbs.add64_u32((kh[:, 0::2], kl[:, 0::2]), tok_eff[:, 0::2])
+            b = limbs.add64_u32((kh[:, 1::2], kl[:, 1::2]), tok_eff[:, 1::2])
+            p_hi, p_lo = limbs.mul64_low(a, b)
+        else:
+            raise ValueError(family)
+        hi, lo = ml._reduce_sum64((p_hi, p_lo), axis=-1)
+        hi, lo = limbs.add64(
+            (hi, lo),
+            (jnp.broadcast_to(m1[k, 0], hi.shape),
+             jnp.broadcast_to(m1[k, 1], lo.shape)))
+        outs.append(jnp.stack([hi, lo], axis=-1))
+    return jnp.stack(outs, axis=1)
 
 
 def gf_accumulate_ref(tokens, keys32, family="gf_multilinear"):

@@ -18,7 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.ops import hash_tokens_host
+from ..core.keys import MultiKeyBuffer
+from ..core.ops import hash_tokens_device_multi
+
+_PREFIX_KEY_SEED = 0x1E53
 
 
 @dataclasses.dataclass
@@ -42,22 +45,41 @@ class ServeEngine:
             lambda p, c, t, pos: api.decode_step(p, c, t, pos))
         self._prefill_cache = {}
         self._prefix_logit_cache: dict[int, np.ndarray] = {}
+        self._prefix_keys = MultiKeyBuffer(seed=_PREFIX_KEY_SEED, n_hashes=1)
+        self._req_key_cache: dict[int, int] = {}
         self.slots: list[Request | None] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int64)
         self.caches = api.init_caches(n_slots, max_seq)
         self.stats = {"prefix_hits": 0, "prefills": 0, "ticks": 0}
 
-    # -- prefix cache (paper fingerprints) -----------------------------------
+    # -- prefix cache (paper fingerprints, DESIGN.md §3) ---------------------
 
     def _prompt_key(self, prompt: np.ndarray) -> int:
-        return int(hash_tokens_host(prompt.astype(np.uint32)))
+        """64-bit variable-length fingerprint of one prompt (host path --
+        bit-identical to the batched device path used in submit_all)."""
+        return int(hash_tokens_device_multi(
+            [prompt.astype(np.uint32)], keys=self._prefix_keys,
+            out_bits=64, backend="host")[0, 0])
+
+    def _precompute_prompt_keys(self, requests: "list[Request]") -> None:
+        """Fingerprint every pending prompt in ONE fused hash launch; keys
+        land in a per-request cache consulted by _assign at admission."""
+        if not requests:
+            return
+        fps = hash_tokens_device_multi(
+            [r.prompt.astype(np.uint32) for r in requests],
+            keys=self._prefix_keys, out_bits=64)[:, 0]
+        for r, fp in zip(requests, fps):
+            self._req_key_cache[r.req_id] = int(fp)
 
     # -- slot management -----------------------------------------------------
 
     def _assign(self, req: Request, slot: int):
         """Prefill a single request into slot `slot` of the batched cache."""
         T = len(req.prompt)
-        key = self._prompt_key(req.prompt)
+        key = self._req_key_cache.pop(req.req_id, None)
+        if key is None:
+            key = self._prompt_key(req.prompt)
         logits, cache1 = self.api.prefill(
             self.params, {"tokens": jnp.asarray(req.prompt[None], jnp.int32)},
             cache_len=self.S)
@@ -85,6 +107,7 @@ class ServeEngine:
 
     def submit_all(self, requests: list[Request]):
         pending = list(requests)
+        self._precompute_prompt_keys(pending)
         while pending or any(s is not None for s in self.slots):
             # fill free slots
             for i in range(self.B):

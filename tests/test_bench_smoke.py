@@ -1,0 +1,54 @@
+"""Bench harness smoke: runs end-to-end on CPU (fast mode) and emits the
+machine-readable BENCH_kernels.json baseline with the required fields."""
+import json
+import os
+
+import pytest
+
+
+def test_bench_harness_end_to_end(tmp_path, capsys, monkeypatch):
+    from benchmarks import common, run
+
+    monkeypatch.chdir(tmp_path)
+    common.ROWS.clear()
+    common.JSON_ROWS.clear()
+    run.main(["--fast", "--only", "kernels,multihash",
+              "--json", "BENCH_kernels.json"])
+    out = capsys.readouterr().out
+    assert out.startswith("name,us_per_call,derived")
+
+    with open("BENCH_kernels.json") as f:
+        data = json.load(f)
+    assert data["schema"] == "bench-v1" and data["fast"] is True
+    rows = {r["name"]: r for r in data["rows"]}
+    assert len(rows) >= 5
+    for r in rows.values():
+        assert set(r) == {"name", "us_per_call", "derived",
+                          "bytes_per_s", "cycles_per_byte_equiv"}
+    # throughput fields populated where n_bytes was known
+    timed = [r for r in rows.values() if r["bytes_per_s"]]
+    assert timed and all(r["cycles_per_byte_equiv"] > 0 for r in timed)
+
+    # acceptance: fused batched Bloom admission beats the seed host loop
+    host = next(r for n, r in rows.items() if "host-loop-seed" in n)
+    fused = next(r for n, r in rows.items() if "fused-interpret" in n)
+    assert fused["us_per_call"] < host["us_per_call"], (fused, host)
+
+
+def test_bench_only_validation():
+    from benchmarks import run
+
+    with pytest.raises(SystemExit):
+        run.main(["--only", "nonsense", "--json", ""])
+
+
+def test_committed_baseline_is_current_schema():
+    """The repo-root BENCH_kernels.json baseline (committed by this PR's
+    bench run) parses and carries the v1 schema."""
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+    if not os.path.exists(path):
+        pytest.skip("baseline not generated yet")
+    with open(path) as f:
+        data = json.load(f)
+    assert data["schema"] == "bench-v1"
+    assert any("multihash" in r["name"] for r in data["rows"])

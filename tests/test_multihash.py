@@ -1,0 +1,250 @@
+"""Fused multi-hash engine: cross-backend equivalence, single-launch
+admission accounting, autotuner cache behavior, and consumer rewiring."""
+import numpy as np
+import pytest
+
+from repro.core import hostref, ops as cops
+from repro.core.keys import KeyBuffer, MultiKeyBuffer, derive_stream_seed
+from repro.data import BloomFilter, ExactDedup, HashPipeline, PipelineConfig
+from repro.kernels import autotune as ktune
+from repro.kernels import ops as kops
+
+RNG = np.random.Generator(np.random.Philox(key=np.uint64(0x3141)))
+
+FAMILIES = ["multilinear", "multilinear_2x2", "multilinear_hm"]
+
+
+def _ragged(batch, max_len, min_len=0):
+    lens = RNG.integers(min_len, max_len + 1, size=batch)
+    return [RNG.integers(0, 2**32, size=int(n), dtype=np.uint64).astype(np.uint32)
+            for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# cross-backend equivalence (pallas-interpret == jnp oracle == host numpy)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("B,N", [(1, 1), (3, 7), (5, 33), (9, 129), (2, 1000)])
+def test_cross_backend_variable_length(family, B, N):
+    """Randomized ragged shapes, odd N, N not a multiple of block_n: the
+    zero-padded-keys invariant must hold on every backend."""
+    items = _ragged(B, N)
+    mkb = MultiKeyBuffer(seed=0xCAFE, n_hashes=3)
+    host = cops.hash_tokens_device_multi(items, keys=mkb, family=family,
+                                         backend="host")
+    jnp_ = cops.hash_tokens_device_multi(items, keys=mkb, family=family,
+                                         backend="jnp")
+    interp = cops.hash_tokens_device_multi(items, keys=mkb, family=family,
+                                           backend="interpret")
+    np.testing.assert_array_equal(host, jnp_)
+    np.testing.assert_array_equal(host, interp)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("N", [4, 7, 250])
+def test_cross_backend_fixed_length(family, N):
+    toks = RNG.integers(0, 2**32, size=(4, N), dtype=np.uint64).astype(np.uint32)
+    mkb = MultiKeyBuffer(seed=0xBEEF, n_hashes=2)
+    outs = [cops.hash_tokens_device_multi(
+        toks, keys=mkb, family=family, variable_length=False, backend=be)
+        for be in ("host", "jnp", "interpret")]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_cross_backend_odd_block_boundary(family):
+    """N chosen so padded width is NOT a multiple of the forced block_n:
+    exercises the zero-padded-keys invariant across tile boundaries."""
+    items = _ragged(6, 37, min_len=1)
+    mkb = MultiKeyBuffer(seed=0xD00D, n_hashes=2)
+    host = cops.hash_tokens_device_multi(items, keys=mkb, family=family,
+                                         backend="host")
+    forced = cops.hash_tokens_device_multi(items, keys=mkb, family=family,
+                                           backend="interpret",
+                                           block_b=4, block_n=8)
+    np.testing.assert_array_equal(host, forced)
+
+
+def test_matches_seed_host_path_k1():
+    """K=1 variable-length multilinear == the seed hash_tokens_host path
+    (stream 0 of MultiKeyBuffer IS KeyBuffer(seed))."""
+    for L in (0, 1, 5, 12):
+        row = RNG.integers(0, 2**32, size=max(L, 1), dtype=np.uint64
+                           ).astype(np.uint32)[:L]
+        want = cops.hash_tokens_host(row, family="multilinear",
+                                     keys=KeyBuffer(seed=0x51), variable_length=True)
+        got = cops.hash_tokens_device_multi([row], seed=0x51,
+                                            family="multilinear", backend="host")
+        assert int(got[0, 0]) == int(want)
+
+
+def test_stream_derivation():
+    assert derive_stream_seed(123, 0) == 123
+    seeds = {derive_stream_seed(123, j) for j in range(16)}
+    assert len(seeds) == 16
+    mkb = MultiKeyBuffer(seed=123, n_hashes=2)
+    assert (mkb.stacked_u64(8)[0] == KeyBuffer(seed=123).u64(8)).all()
+
+
+def test_hash_independence_across_streams():
+    """K hashes of the same item behave as independent functions (no two
+    streams collide on a batch of random items)."""
+    items = _ragged(64, 8, min_len=4)
+    h = cops.hash_tokens_device_multi(items, n_hashes=4, seed=7, backend="host")
+    for a in range(4):
+        for b in range(a + 1, 4):
+            assert (h[:, a] != h[:, b]).any()
+
+
+def test_out_bits_64_consistent_with_32():
+    items = _ragged(5, 9, min_len=1)
+    mkb = MultiKeyBuffer(seed=3, n_hashes=2)
+    h32 = cops.hash_tokens_device_multi(items, keys=mkb, backend="jnp")
+    h64 = cops.hash_tokens_device_multi(items, keys=mkb, backend="jnp",
+                                        out_bits=64)
+    np.testing.assert_array_equal(h32, (h64 >> np.uint64(32)).astype(np.uint32))
+
+
+def test_lengths_validation():
+    with pytest.raises(ValueError):
+        cops.hash_tokens_device_multi(
+            np.zeros((2, 4), np.uint32), lengths=np.asarray([1, 9]),
+            backend="host")
+    with pytest.raises(ValueError):
+        cops.hash_tokens_device_multi(
+            np.zeros((2, 4), np.uint32), variable_length=False,
+            lengths=np.asarray([1, 2]), backend="host")
+
+
+# ---------------------------------------------------------------------------
+# single-launch accounting (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_bloom_batch_admission_is_one_launch():
+    """k-probe Bloom admission for a whole batch = exactly ONE kernel/jit
+    launch -- no per-item or per-probe Python-loop hashing."""
+    bf = BloomFilter(n_items=4096, fp_rate=1e-3, backend="jnp")
+    assert bf.k >= 2  # genuinely multi-probe
+    items = _ragged(512, 16, min_len=1)
+    before = kops.launch_count()
+    bf.add_batch(items)
+    assert kops.launch_count() - before == 1
+    before = kops.launch_count()
+    hits = bf.contains_batch(items)
+    assert kops.launch_count() - before == 1
+    assert hits.all()  # no false negatives, ever
+
+
+def test_pipeline_batch_admission_is_one_launch():
+    pipe = HashPipeline(PipelineConfig(seq_len=16, batch_size=2, eval_pct=5))
+    docs = _ragged(64, 24, min_len=1)
+    before = kops.launch_count()
+    routes = pipe.admit_batch(docs)
+    assert kops.launch_count() - before == 1
+    assert len(routes) == 64
+    # bit-identical to streaming admission
+    pipe2 = HashPipeline(PipelineConfig(seq_len=16, batch_size=2, eval_pct=5))
+    assert routes == [pipe2.admit(d) for d in docs]
+
+
+def test_bloom_single_and_batch_agree():
+    bf1 = BloomFilter(n_items=256, fp_rate=1e-2)
+    bf2 = BloomFilter(n_items=256, fp_rate=1e-2)
+    items = _ragged(40, 12, min_len=1)
+    bf1.add_batch(items)
+    for it in items:
+        bf2.add(it)
+    np.testing.assert_array_equal(bf1.bits, bf2.bits)
+
+
+def test_exact_dedup_batch_matches_streaming():
+    items = _ragged(30, 10, min_len=1)
+    items[7] = items[3].copy()  # in-batch duplicate
+    d1, d2 = ExactDedup(), ExactDedup()
+    mask = d1.check_and_add_batch(items)
+    singles = np.asarray([d2.check_and_add(it) for it in items])
+    np.testing.assert_array_equal(mask, singles)
+    assert not mask[7]
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+def test_autotune_sweep_and_cache(tmp_path):
+    ktune.clear_cache()
+    res = ktune.sweep("multilinear", B=4, N=16, K=2, backend="interpret",
+                      candidates=[(4, 8), (4, 16)], repeats=1)
+    assert set(res) == {(4, 8), (4, 16)}
+    assert all(t > 0 for t in res.values())
+    best = ktune.best_blocks("multilinear", 4, 16, 2, "interpret")
+    assert best in res
+    path = str(tmp_path / "tune.json")
+    ktune.save_cache(path)
+    ktune.clear_cache()
+    assert ktune.best_blocks("multilinear", 4, 16, 2, "interpret",
+                             cache_path=path) == best
+    ktune.clear_cache()
+
+
+def test_autotune_defaults_are_valid():
+    for backend in ("interpret", "jnp", "pallas"):
+        bb, bn = ktune.default_blocks(B=100, N_req=37, backend=backend)
+        assert bb >= 1 and bn % 2 == 0 and bn <= 1 << 16
+
+
+def test_engine_autotune_path_matches_default(tmp_path):
+    ktune.clear_cache()
+    items = _ragged(8, 10, min_len=1)
+    mkb = MultiKeyBuffer(seed=11, n_hashes=2)
+    a = cops.hash_tokens_device_multi(items, keys=mkb, backend="interpret")
+    b = cops.hash_tokens_device_multi(items, keys=mkb, backend="interpret",
+                                      autotune=True)
+    np.testing.assert_array_equal(a, b)
+    ktune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# fused epilogue vs the seed (unfused) kernel path
+# ---------------------------------------------------------------------------
+
+def test_fused_epilogue_matches_seed_kernel():
+    """K=1 fixed-length multihash == seed multilinear_hash (whose m1/>>32
+    run as separate XLA ops outside the kernel)."""
+    import jax.numpy as jnp
+    from repro.core import keys as keymod
+
+    B, N = 6, 96
+    toks = RNG.integers(0, 2**32, size=(B, N), dtype=np.uint64).astype(np.uint32)
+    kb = keymod.KeyBuffer(seed=0xF00D)
+    hi, lo = kb.hi_lo(N + 1)
+    for fam in ("multilinear", "multilinear_hm"):
+        want = np.asarray(kops.multilinear_hash(
+            toks, jnp.asarray(hi), jnp.asarray(lo), family=fam,
+            backend="interpret"))
+        got = cops.hash_tokens_device_multi(
+            toks, keys=MultiKeyBuffer(seed=0xF00D), family=fam,
+            variable_length=False, backend="interpret")[:, 0]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_host_oracle_masking_edges():
+    """Length-code edge cases: L=0 (pure sentinel), L=N (sentinel lands in
+    the padding), fixed rows with odd N (HM even-pad key stays live)."""
+    mkb = MultiKeyBuffer(seed=5, n_hashes=1)
+    keys = mkb.stacked_u64(32)
+    # L=0 variable-length: h = m1 + k1*1
+    toks = np.zeros((1, 8), np.uint32)
+    lens = hostref.encode_lengths(np.asarray([0]), 8, True, 1)
+    got = hostref.multilinear_multi_np(toks, lens, keys)
+    want = (int(keys[0, 0]) + int(keys[0, 1])) % (1 << 64)
+    assert int(got[0, 0]) == want
+    # full-width row: sentinel must use key N+1
+    row = RNG.integers(0, 2**32, size=4, dtype=np.uint64).astype(np.uint32)
+    full = cops.hash_tokens_device_multi([row], keys=mkb, backend="host",
+                                         out_bits=64)[0, 0]
+    manual = hostref.multilinear_np_u64(
+        np.concatenate([row, np.ones(1, np.uint32)]), keys[0])
+    assert full == manual

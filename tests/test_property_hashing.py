@@ -1,9 +1,17 @@
-"""Hypothesis property tests on the hashing core's invariants."""
-import numpy as np
-from hypothesis import given, settings, strategies as st
+"""Hypothesis property tests on the hashing core's invariants.
 
-from repro.core import hostref, keys as keymod, ops as cops
-from repro.core.gf import clmul_ref, poly_mod_ref
+hypothesis is optional on driver images: this module skips cleanly when it
+is absent (deterministic shard tests live in test_shard_statistics.py).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import hostref, keys as keymod, ops as cops  # noqa: E402
+from repro.core.gf import clmul_ref, poly_mod_ref  # noqa: E402
 
 KB = keymod.KeyBuffer(seed=0xABCD)
 
@@ -75,17 +83,3 @@ def test_shard_assignment_range_and_determinism(rows):
     other = cops.shard_assignment(arr, n_shards=13, salt=1)
     if len(rows) >= 32:
         assert not (sh == other).all()
-
-
-def test_shard_uniformity_chi2():
-    """Uniformity (paper §1): chi^2 of shard loads under the strongly
-    universal family stays within 5 sigma for 64k random rows."""
-    rng = np.random.Generator(np.random.Philox(key=np.uint64(1)))
-    rows = rng.integers(0, 2**32, size=(1 << 16, 4), dtype=np.uint64).astype(np.uint32)
-    n_shards = 64
-    sh = cops.shard_assignment(rows, n_shards=n_shards)
-    counts = np.bincount(sh, minlength=n_shards)
-    expected = len(rows) / n_shards
-    chi2 = ((counts - expected) ** 2 / expected).sum()
-    # chi2 ~ chi2_{63}: mean 63, sd sqrt(126) ~ 11.2; 5 sigma ~ 119
-    assert chi2 < 119, f"shard loads too skewed: chi2={chi2}"

@@ -1,0 +1,27 @@
+"""Deterministic statistical tests on shard routing (no hypothesis needed)."""
+import numpy as np
+
+from repro.core import ops as cops
+
+
+def test_shard_uniformity_chi2():
+    """Uniformity (paper §1): chi^2 of shard loads under the strongly
+    universal family stays within 5 sigma for 64k random rows."""
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(1)))
+    rows = rng.integers(0, 2**32, size=(1 << 16, 4), dtype=np.uint64).astype(np.uint32)
+    n_shards = 64
+    sh = cops.shard_assignment(rows, n_shards=n_shards)
+    counts = np.bincount(sh, minlength=n_shards)
+    expected = len(rows) / n_shards
+    chi2 = ((counts - expected) ** 2 / expected).sum()
+    # chi2 ~ chi2_{63}: mean 63, sd sqrt(126) ~ 11.2; 5 sigma ~ 119
+    assert chi2 < 119, f"shard loads too skewed: chi2={chi2}"
+
+
+def test_shard_determinism_and_salt_sensitivity():
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(2)))
+    rows = rng.integers(0, 2**32, size=(128, 4), dtype=np.uint64).astype(np.uint32)
+    sh = cops.shard_assignment(rows, n_shards=13)
+    assert ((sh >= 0) & (sh < 13)).all()
+    np.testing.assert_array_equal(sh, cops.shard_assignment(rows, n_shards=13))
+    assert not (sh == cops.shard_assignment(rows, n_shards=13, salt=1)).all()
