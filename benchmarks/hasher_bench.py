@@ -1,0 +1,64 @@
+"""Hasher object-API overhead bench: the `repro.hash.Hasher` engine vs the
+legacy `core.ops` free functions (now deprecation shims).
+
+The redesign's contract is zero throughput cost: `Hasher.hash_batch` IS the
+moved engine, so the object API must track the free-function path within
+noise, while the pure jitted `__call__` path (impossible with the legacy
+API) shows what staying in-graph buys.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops as cops
+from repro.core.keys import MultiKeyBuffer
+from repro.hash import Hasher, HashSpec
+
+from . import common
+from .common import row, timeit
+
+
+def run():
+    fast = common.FAST
+    B = 512 if fast else 4096
+    L, K = 16, 4
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(0x0B7EC7)))
+    toks = rng.integers(0, 2**32, size=(B, L), dtype=np.uint64).astype(np.uint32)
+    n_bytes = B * L * 4
+    reps = 1 if fast else 3
+
+    mkb = MultiKeyBuffer(seed=0x0B7, n_hashes=K)
+    spec = HashSpec(family="multilinear", n_hashes=K, out_bits=32,
+                    variable_length=True, seed=0x0B7)
+    hasher = Hasher.from_spec(spec, max_len=L)
+
+    def legacy():
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return cops.hash_tokens_device_multi(
+                toks, keys=mkb, family="multilinear", backend="jnp")
+
+    t_legacy = timeit(legacy, repeats=reps, inner=1, warmup=1)
+    row(f"hasher_overhead/B{B}xK{K}/legacy-free-fn", t_legacy * 1e6,
+        "deprecated core.ops shim path", n_bytes=n_bytes)
+
+    t_obj = timeit(lambda: hasher.hash_batch(toks, backend="jnp"),
+                   repeats=reps, inner=1, warmup=1)
+    row(f"hasher_overhead/B{B}xK{K}/hash_batch", t_obj * 1e6,
+        f"object API; x{t_obj / t_legacy:.2f} of legacy (must be ~1)",
+        n_bytes=n_bytes)
+
+    # the jit-native surface the free functions never had: Hasher as a
+    # pytree operand of a jitted step, tokens stay on device
+    toks_dev = jnp.asarray(toks)
+    pure = jax.jit(lambda hs, t: hs(t))
+    jax.block_until_ready(pure(hasher, toks_dev))  # compile outside timing
+    t_pure = timeit(lambda: pure(hasher, toks_dev),
+                    repeats=reps, inner=1, warmup=1)
+    row(f"hasher_overhead/B{B}xK{K}/pure-jit-call", t_pure * 1e6,
+        f"in-graph __call__; x{t_pure / t_legacy:.2f} of legacy",
+        n_bytes=n_bytes)

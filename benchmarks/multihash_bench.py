@@ -60,15 +60,14 @@ def run():
             n_bytes=n_bytes)
 
     # K-scaling of the fused engine (token bytes read once for all K)
-    from repro.core.keys import MultiKeyBuffer
-    from repro.core.ops import hash_tokens_device_multi
+    from repro.hash import Hasher, HashSpec
 
     toks = np.stack(items)
     for K in (1, 4, 8):
-        mkb = MultiKeyBuffer(seed=0xE7A, n_hashes=K)
+        hasher = Hasher.from_spec(HashSpec(
+            family="multilinear", n_hashes=K, seed=0xE7A))
         t = timeit(
-            lambda mkb=mkb: hash_tokens_device_multi(
-                toks, keys=mkb, family="multilinear", backend="jnp"),
+            lambda h=hasher: h.hash_batch(toks, backend="jnp"),
             repeats=1 if fast else 3, inner=1, warmup=1)
         row(f"multihash/kscale/B{B}xK{K}/jnp", t * 1e6,
             f"{K} hash fns, one pass", n_bytes=n_bytes)

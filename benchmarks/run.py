@@ -11,6 +11,7 @@ cycles/byte-equivalent) so the perf trajectory has a committed baseline.
   wordsize-- word-size/Stinson trade-off (paper §3.2/§5.5, Figs 1-3)
   kernels -- Pallas kernel VMEM/roofline model + interpret sanity
   multihash -- fused K-function engine vs seed host Bloom loop
+  hasher  -- Hasher object API vs legacy free functions (overhead ~0)
   roofline-- dry-run roofline terms (if results/dryrun exists)
 
 Flags: --fast (CI smoke sizes), --json PATH (default BENCH_kernels.json),
@@ -42,7 +43,7 @@ def main(argv=None) -> None:
 
     from types import SimpleNamespace
 
-    from . import (gf_variants, kernels_bench, multihash_bench,
+    from . import (gf_variants, hasher_bench, kernels_bench, multihash_bench,
                    table2_multilinear, table3_common, table4_nh, wordsize)
 
     def _roofline_run():
@@ -63,6 +64,7 @@ def main(argv=None) -> None:
         "wordsize": wordsize,
         "kernels": kernels_bench,
         "multihash": multihash_bench,
+        "hasher": hasher_bench,
         "roofline": SimpleNamespace(run=_roofline_run),
     }
     only = [s for s in args.only.split(",") if s]

@@ -2,52 +2,82 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import KeyBuffer, hash_tokens_host, theory, universality as uni
+from repro.core import KeyBuffer, theory, universality as uni
 from repro.core.universality import multilinear_hm_small, multilinear_small
+from repro.hash import Hasher, HashSpec
 
 
 def main():
     print("=== Strongly universal string hashing (Lemire & Kaser 2012) ===\n")
 
-    # 1. hash some strings of 32-bit characters
+    # 1. a hash is a keyed object: HashSpec (scheme) + Hasher (keys bound)
     rng = np.random.default_rng(0)
     strings = rng.integers(0, 2**32, size=(4, 16), dtype=np.uint64).astype(np.uint32)
     for fam in ("multilinear", "multilinear_2x2", "multilinear_hm"):
-        h = hash_tokens_host(strings, family=fam)
+        hasher = Hasher.from_spec(HashSpec(family=fam), max_len=16)
+        h = hasher.hash_batch(strings, backend="host")[:, 0]
         print(f"{fam:>16}: {[hex(int(x)) for x in h]}")
 
-    # 2. variable-length policy: a string and its zero-padded extension differ
+    # 2. the same Hasher is a pytree: hash INSIDE jit, keys as an operand
+    hasher = Hasher.from_spec(HashSpec(family="multilinear_hm", n_hashes=2),
+                              max_len=16)
+    jitted = jax.jit(lambda hs, t: hs(t))
+    h_dev = jitted(hasher, jnp.asarray(strings))         # (4, 2) uint32
+    h_host = hasher.hash_batch(strings, backend="host")
+    assert (np.asarray(h_dev) == h_host).all()
+    print(f"\njit(hasher) == host reference: {np.asarray(h_dev)[0].tolist()} "
+          "(bit-identical, zero host syncs)")
+
+    # 3. variable-length policy: a string and its zero-padded extension differ
+    vh = Hasher.from_spec(HashSpec(family="multilinear_hm"), max_len=8)
     s = np.asarray([1, 2, 3], np.uint32)
     s_ext = np.asarray([1, 2, 3, 0], np.uint32)
-    print(f"\nappend-1 rule: h({s.tolist()})={int(hash_tokens_host(s)):#x} != "
-          f"h({s_ext.tolist()})={int(hash_tokens_host(s_ext)):#x}")
+    h1 = int(vh.hash_batch([s], backend="host")[0, 0])
+    h2 = int(vh.hash_batch([s_ext], backend="host")[0, 0])
+    print(f"append-1 rule: h({s.tolist()})={h1:#x} != h({s_ext.tolist()})={h2:#x}")
 
-    # 3. strong universality, verified exhaustively at K=6, L=3 (Thm 3.1)
+    # 4. strong universality, verified exhaustively at K=6, L=3 (Thm 3.1)
     dev = uni.check_strong_universality(multilinear_small, (3,), (5,), K=6, L=3, n_keys=2)
     dev_hm = uni.check_strong_universality(multilinear_hm_small, (0, 0), (2, 6),
                                            K=6, L=3, n_keys=3)
     print(f"\nThm 3.1 exhaustive check (K=6,L=3): max deviation from 2^-8: "
           f"MULTILINEAR={dev}, HM={dev_hm} (0 = exactly pairwise independent)")
 
-    # 4. the paper's counterexample: the 'folklore' xor family is NOT universal
+    # 5. the paper's counterexample: the 'folklore' xor family is NOT universal
     p = uni.collision_probability(uni.folklore_xor_small, (0, 0), (2, 6),
                                   K=6, L=3, n_keys=2)
     print(f"folklore xor family: P[h(0,0)=h(2,6)] = {p} > 1/8  (falsified, §3)")
 
-    # 5. Stinson bound: Multilinear is nearly random-bit-optimal
+    # 6. Stinson bound: Multilinear is nearly random-bit-optimal
     M, z = 1 << 20, 32
     L = round(theory.optimal_L_memory(M, z))
     print(f"\nStinson ratio at M=2^20 bits: K=64 -> {theory.stinson_ratio(M, 33, z):.2f}, "
           f"free word size (L*={L}) -> {theory.stinson_ratio(M, L, z):.3f}")
 
-    # 6. keys on demand (paper §6)
+    # 7. keys on demand (paper §6): Hasher growth extends Philox streams
     kb = KeyBuffer(seed=42, initial=16)
     first = int(kb.u64(4)[3])
     kb.ensure(100_000)
     assert int(kb.u64(4)[3]) == first
-    print(f"\nKeyBuffer: grew 16 -> {len(kb)} keys; earlier keys unchanged.")
+    small = Hasher.from_spec(HashSpec(seed=42), max_len=4)
+    big = small.ensure(1000)
+    row = np.asarray([9, 9, 9], np.uint32)
+    assert (small.hash_batch([row], backend="host")
+            == big.hash_batch([row], backend="host")).all()
+    print(f"\nKeyBuffer: grew 16 -> {len(kb)} keys; earlier keys unchanged "
+          f"(Hasher.ensure: capacity {small.capacity} -> {big.capacity}).")
+
+    # 8. streaming fingerprints: two-level tree over a device token stream
+    sh = Hasher.from_spec(HashSpec(seed=7), max_len=256)
+    stream = rng.integers(0, 2**32, size=1000, dtype=np.uint64).astype(np.uint32)
+    st = sh.stream(chunk_words=256, max_chunks=64)
+    for i in range(0, 1000, 300):
+        st = sh.update(st, jnp.asarray(stream[i : i + 300]))
+    print(f"streaming digest of 1000 tokens (4 updates): {sh.digest_int(st):#018x}")
 
 
 if __name__ == "__main__":

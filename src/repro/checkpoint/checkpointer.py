@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.ops import fingerprint_bytes
+from ..hash import fingerprint_bytes
 from ..parallel import sharding as sh
 
 

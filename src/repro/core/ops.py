@@ -1,28 +1,47 @@
-"""Public hashing API: family registry + variable-length policy + fingerprints.
+"""DEPRECATED free-function hashing API -- thin shims over `repro.hash`.
 
-This is what the rest of the framework imports. Device paths dispatch to the
-Pallas kernel (TPU) or the limb-jnp implementation (CPU/interpret); host
-paths use numpy uint64.
+The engine moved to `repro.hash`: `HashSpec` (scheme) + `Hasher` (keys bound
+to the scheme, pytree-registered, pure-JAX `__call__`). These free functions
+survive one release as bit-identical deprecation shims; every call emits one
+`DeprecationWarning`. The repo's own tests turn that warning into an ERROR
+when it originates from repro's internal modules (pytest.ini), so nothing
+inside the package may call these -- consumers are rewired onto `Hasher`.
+
+Migration map:
+  hash_tokens_host(...)          -> Hasher.from_spec(spec).hash_batch(x, backend="host")
+  hash_tokens_device(...)        -> hasher(tokens)  (pure JAX, jit/vmap-safe)
+  hash_tokens_device_multi(...)  -> hasher.hash_batch(items)
+  fingerprint_bytes(...)         -> repro.hash.fingerprint_bytes(data)
+  shard_assignment(...)          -> repro.hash.shard_assignment / Hasher.shard_ids
+  global_keys()                  -> repro.hash.keyring.key_buffer()
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
-import jax.numpy as jnp
 import numpy as np
 
-from . import baselines, gf, hostref, multilinear
+from . import hostref, multilinear
 from .keys import KeyBuffer, MultiKeyBuffer
 
-_DEFAULT_SEED = 0x1E53  # "LEKA" -- Lemire/Kaser
+_DEFAULT_SEED = 0x1E53  # "LEKA" -- Lemire/Kaser (== repro.hash.DEFAULT_SEED)
 
-# process-wide deterministic key buffer (replicated everywhere; see keys.py)
-_GLOBAL_KEYS = KeyBuffer(seed=_DEFAULT_SEED)
+
+def _warn(name: str, alt: str) -> None:
+    warnings.warn(
+        f"repro.core.ops.{name} is deprecated; use {alt} from repro.hash",
+        DeprecationWarning, stacklevel=3)
 
 
 def global_keys() -> KeyBuffer:
-    return _GLOBAL_KEYS
+    """Deprecated: the process-global key buffer is now the keyring's
+    deterministic default (`repro.hash.keyring.key_buffer()`)."""
+    from ..hash import keyring
+
+    _warn("global_keys", "keyring.key_buffer()")
+    return keyring.key_buffer(_DEFAULT_SEED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,28 +68,34 @@ def pad_even(tokens: np.ndarray) -> np.ndarray:
     return np.pad(tokens, pad)
 
 
+def _seed_of(keys) -> int:
+    return _DEFAULT_SEED if keys is None else int(keys.seed)
+
+
 def hash_tokens_host(
     tokens: np.ndarray,
     family: str = "multilinear_hm",
     keys: KeyBuffer | None = None,
     variable_length: bool = True,
 ) -> np.ndarray:
-    """Hash (..., n) uint32 token arrays on the host (numpy uint64 path).
+    """Deprecated shim: hash (..., n) uint32 token arrays on the host.
 
-    variable_length=True applies the paper's append-1 rule so prefixes of
-    each other hash independently; fixed-length callers may skip it.
+    Bit-identical to `Hasher.from_spec(spec).hash_batch(x, backend="host")`
+    with a single-stream spec (stream 0 IS `KeyBuffer(seed)`).
     """
-    fam = FAMILIES[family]
-    kb = keys or _GLOBAL_KEYS
-    s = np.asarray(tokens, dtype=np.uint32)
-    if variable_length:
-        pad = [(0, 0)] * (s.ndim - 1) + [(0, 1)]
-        s = np.pad(s, pad)
-        s[..., -1] = 1
-    if fam.needs_even:
-        s = pad_even(s)
-    ku = kb.u64(s.shape[-1] + 1)
-    return fam.host_fn(s, ku)
+    from ..hash import HashSpec, keyring
+
+    _warn("hash_tokens_host", "Hasher.hash_batch(..., backend='host')")
+    if family not in FAMILIES:
+        raise KeyError(family)
+    spec = HashSpec(family=family, n_hashes=1, out_bits=32,
+                    variable_length=variable_length, seed=_seed_of(keys))
+    arr = np.asarray(tokens, dtype=np.uint32)
+    n = arr.shape[-1]
+    lead = int(np.prod(arr.shape[:-1], dtype=np.int64))  # -1 breaks when n==0
+    out = keyring.hasher_for(spec).hash_batch(arr.reshape(lead, n),
+                                              backend="host")[:, 0]
+    return out.reshape(arr.shape[:-1])
 
 
 def hash_tokens_device(
@@ -79,43 +104,25 @@ def hash_tokens_device(
     keys: KeyBuffer | None = None,
     use_kernel: bool = False,
 ):
-    """In-graph hash of (..., n) token arrays (fixed length; jit-safe).
+    """Deprecated shim: in-graph hash of (..., n) token arrays (fixed
+    length). The replacement is the pure `hasher(tokens)` call path, which
+    additionally composes under jit/vmap with the Hasher as an operand."""
+    import jax
 
-    `use_kernel=True` routes through the Pallas kernel (TPU target /
-    interpret mode); default is the fused limb-jnp path that XLA handles
-    well on every backend.
-    """
-    fam = FAMILIES[family]
-    kb = keys or _GLOBAL_KEYS
-    n = tokens.shape[-1]
-    if fam.needs_even and n % 2:
-        pad = [(0, 0)] * (tokens.ndim - 1) + [(0, 1)]
-        tokens = jnp.pad(tokens, pad)
-        n += 1
-    hi, lo = kb.hi_lo(n + 1)
+    from ..hash import HashPlan, HashSpec, keyring
+
+    _warn("hash_tokens_device", "Hasher.__call__")
+    if family not in FAMILIES:
+        raise KeyError(family)
+    spec = HashSpec(family=family, n_hashes=1, out_bits=32,
+                    variable_length=False, seed=_seed_of(keys))
+    plan = None
     if use_kernel:
-        from ..kernels import ops as kops
-
-        return kops.multilinear_hash(tokens, jnp.asarray(hi), jnp.asarray(lo), family=family)
-    return fam.device_fn(tokens, jnp.asarray(hi), jnp.asarray(lo))
-
-
-def _even(n: int) -> int:
-    return n + (n & 1)
-
-
-def _stack_ragged(tokens):
-    """Normalize tokens to (B, N) uint32 + per-row lengths (or None if the
-    input was already a dense 2-D batch)."""
-    if isinstance(tokens, (list, tuple)):
-        rows = [np.atleast_1d(np.asarray(r)).astype(np.uint32) for r in tokens]
-        n = max((len(r) for r in rows), default=0)
-        out = np.zeros((len(rows), n), np.uint32)
-        for i, r in enumerate(rows):
-            out[i, : len(r)] = r
-        return out, np.asarray([len(r) for r in rows], np.int64)
-    arr = np.atleast_2d(np.asarray(tokens)).astype(np.uint32)
-    return arr, None
+        plan = HashPlan(backend="pallas" if jax.default_backend() == "tpu"
+                        else "interpret")
+    n = jax.numpy.asarray(tokens).shape[-1]
+    hasher = keyring.hasher_for(spec, max_len=max(n, 256), plan=plan)
+    return hasher(tokens)[..., 0]
 
 
 def hash_tokens_device_multi(
@@ -133,149 +140,55 @@ def hash_tokens_device_multi(
     block_n: int | None = None,
     autotune: bool = False,
 ) -> np.ndarray:
-    """Batched multi-hash: K independent hashes of every row in ONE pass.
+    """Deprecated shim: batched multi-hash (K functions, one fused pass).
 
-    The system's main hash entry point (DESIGN.md §3): a (B, N) token batch
-    -- or a ragged list of 1-D rows -- is hashed by `n_hashes` independent
-    functions (disjoint key streams, see `MultiKeyBuffer`) in a single
-    fused kernel/jit launch. Variable-length policy (the paper's append-1),
-    the m1 add, and the final >>32 all happen inside the launch.
-
-    backend: 'pallas' (TPU kernel), 'interpret' (kernel body on CPU),
-      'jnp' (fused XLA oracle -- default off-TPU), 'host' (vectorized numpy
-      uint64; bit-identical, no jit -- the single-item fast path).
-    out_bits: 32 -> (B, K) uint32 (paper hash); 64 -> (B, K) uint64 full
-      accumulators (fingerprint/dedup consumers).
-    Every non-host call issues exactly one launch (`kernels.ops.launch_count`).
+    Bit-identical to `Hasher.hash_batch` -- the engine itself moved there
+    (DESIGN.md §3/§6); this wrapper only maps the legacy keyword surface
+    onto a `HashSpec` + key buffer.
     """
+    from ..hash import Hasher, HashSpec, keyring
+
+    _warn("hash_tokens_device_multi", "Hasher.hash_batch")
     if family not in FAMILIES:
         raise KeyError(family)
-    toks, ragged_lens = _stack_ragged(tokens)
-    if lengths is None:
-        if ragged_lens is not None and not variable_length:
-            raise ValueError(
-                "ragged input requires variable_length=True (fixed-length "
-                "semantics are ambiguous for rows of different lengths); "
-                "pass a dense (B, N) array for fixed-length hashing")
-        lengths = ragged_lens
-    B, N = toks.shape
-    mkb = keys or MultiKeyBuffer(
-        seed=_DEFAULT_SEED if seed is None else seed, n_hashes=n_hashes or 1)
-    K = mkb.n_hashes
-    if n_hashes is not None and n_hashes != K:
-        raise ValueError(f"n_hashes={n_hashes} != key buffer's {K}")
-    if backend is None:
-        import jax
-
-        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
-
-    # Padded width: room for the sentinel + the HM even-pad (DESIGN.md §3).
-    n_req = _even(N + 2) if variable_length else _even(N)
-    lens = hostref.encode_lengths(lengths, N, variable_length, B)
-
-    from ..kernels import autotune as ktune
-
-    if backend == "host":
-        # same pow2 width bucketing as the device path: keeps the key
-        # buffer's per-width memo bounded under ragged streaming (pow2 is
-        # even, so the HM pairing constraint holds)
-        n_h = ktune.pow2_at_least(n_req)
-        toks_h = np.zeros((B, n_h), np.uint32)
-        toks_h[:, :N] = toks
-        acc = hostref.multilinear_multi_np(
-            toks_h, lens, mkb.stacked_u64(n_h + 1), family=family)
-        if out_bits == 64:
-            return acc
-        return (acc >> np.uint64(32)).astype(np.uint32)
-
-    from ..kernels import ops as kops
-
-    if block_b is None or block_n is None:
-        # measure only on explicit opt-in: a default call must never block
-        # on a compile+time sweep (best_blocks still consults the persisted
-        # cache, so tuned processes get measured shapes for free)
-        bb, bn = ktune.best_blocks(family, B, n_req, K, backend,
-                                   measure=bool(autotune))
-        block_b = block_b or bb
-        block_n = block_n or bn
-    # Bucket padded shapes to powers of two of blocks so ragged workloads
-    # hit a bounded jit cache instead of recompiling per batch shape
-    # (same pow2 bucketing as the autotune cache keys -- single helper).
-    Bp = block_b * ktune.pow2_at_least(-(-B // block_b))
-    Np = block_n * ktune.pow2_at_least(-(-n_req // block_n))
-    toks_p = np.zeros((Bp, Np), np.uint32)
-    toks_p[:B, :N] = toks
-    lens_p = np.full(Bp, -(Np + 1) if not variable_length else 0, np.int32)
-    lens_p[:B] = lens
-    kh, kl = mkb.planes(Np + 1)
-    m1 = np.stack([kh[:, 0], kl[:, 0]], axis=1)
-
-    import jax.numpy as jnp
-
-    out = np.asarray(kops.multihash(
-        jnp.asarray(toks_p), jnp.asarray(kh[:, 1:]), jnp.asarray(kl[:, 1:]),
-        jnp.asarray(lens_p), jnp.asarray(m1),
-        family=family, block_b=block_b, block_n=block_n, backend=backend,
-    ))[:B]
-    if out_bits == 64:
-        return (out[:, :, 0].astype(np.uint64) << np.uint64(32)) | out[:, :, 1]
-    return out[:, :, 0]
+    if keys is not None:
+        if n_hashes is not None and n_hashes != keys.n_hashes:
+            raise ValueError(f"n_hashes={n_hashes} != key buffer's {keys.n_hashes}")
+        spec = HashSpec(family=family, n_hashes=keys.n_hashes,
+                        out_bits=out_bits, variable_length=variable_length,
+                        seed=tuple(keys.seeds))
+        hasher = Hasher.from_keys(keys, spec)
+    else:
+        spec = HashSpec(family=family, n_hashes=n_hashes or 1,
+                        out_bits=out_bits, variable_length=variable_length,
+                        seed=_DEFAULT_SEED if seed is None else seed)
+        hasher = keyring.hasher_for(spec)
+    return hasher.hash_batch(
+        tokens, lengths=lengths, backend=backend,
+        block_b=block_b, block_n=block_n, autotune=autotune)
 
 
-def fingerprint_bytes(data: bytes, keys: KeyBuffer | None = None, chunk_words: int = 1 << 16) -> int:
-    """64-bit Multilinear fingerprint of a byte string (checkpoint integrity).
+def fingerprint_bytes(data: bytes, keys: KeyBuffer | None = None,
+                      chunk_words: int = 1 << 16) -> int:
+    """Deprecated shim: 64-bit Multilinear fingerprint of a byte string.
+    Bit-identical to `repro.hash.fingerprint_bytes` (the implementation)."""
+    from ..hash import streaming
 
-    Bytes are padded to a whole number of 32-bit words, length-prepended
-    (paper's variable-length extension: prepend |s|, then the content), and
-    folded chunkwise: chunk fingerprints are themselves a string of 64-bit
-    values hashed again, so arbitrarily long buffers need only `chunk_words`
-    keys (two-level tree -- same trick UMAC uses, strongly universal at each
-    level).
-    """
-    kb = keys or _GLOBAL_KEYS
-    n_bytes = len(data)
-    pad = (-n_bytes) % 4
-    arr = np.frombuffer(data + b"\0" * pad, dtype="<u4")
-    arr = np.concatenate([np.asarray([n_bytes & 0xFFFFFFFF, n_bytes >> 32], np.uint32), arr])
-    ku = kb.u64(chunk_words + 1)
-    fps = []
-    for i in range(0, len(arr), chunk_words):
-        chunk = arr[i : i + chunk_words]
-        fps.append(hostref.multilinear_np_u64(chunk.astype(np.uint32), ku))
-    if len(fps) == 1:
-        return int(fps[0])
-    # level 2: hash the vector of 64-bit fingerprints as 32-bit halves
-    flat = np.asarray(fps, dtype=np.uint64)
-    words = np.empty(2 * len(flat), np.uint32)
-    words[0::2] = (flat & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-    words[1::2] = (flat >> np.uint64(32)).astype(np.uint32)
-    kb.ensure(len(words) + 1)
-    return int(hostref.multilinear_np_u64(words, kb.u64(len(words) + 1)))
-
-
-_SHARD_KEYS: dict[int, MultiKeyBuffer] = {}
-_SHARD_KEYS_MAX = 16  # bound the per-salt cache (rotating salts must not leak)
+    _warn("fingerprint_bytes", "repro.hash.fingerprint_bytes")
+    return streaming.fingerprint_bytes(data, seed=_seed_of(keys), keys=keys,
+                                       chunk_words=chunk_words)
 
 
 def shard_assignment(tokens: np.ndarray, n_shards: int, salt: int = 0,
                      backend: str | None = None) -> np.ndarray:
-    """Deterministic shard id per row of (..., n) tokens.
+    """Deprecated shim: deterministic shard id per row of (..., n) tokens.
 
-    Uniformity of the strongly universal family ensures balanced shards in
-    expectation -- this is the paper-§1 "uniformity" property doing real
-    work. Routed through the fused multi-hash engine: one launch per batch
-    (the key buffer per salt is cached process-wide).
+    Matches `repro.hash.shard_assignment`: the underlying 32-bit hashes are
+    unchanged, but range reduction is now Lemire's bias-free multiply-shift
+    `(h * n_shards) >> 32` instead of the old `h % n_shards`.
     """
-    seed = _DEFAULT_SEED ^ (salt * 0x9E3779B97F4A7C15 % (1 << 63))
-    mkb = _SHARD_KEYS.get(seed)
-    if mkb is None:
-        mkb = _SHARD_KEYS[seed] = MultiKeyBuffer(seed=seed, n_hashes=1)
-        while len(_SHARD_KEYS) > _SHARD_KEYS_MAX:  # evict oldest-inserted salt
-            _SHARD_KEYS.pop(next(k for k in _SHARD_KEYS if k != seed))
-    arr = np.atleast_2d(np.asarray(tokens, np.uint32))
-    batch_shape = arr.shape[:-1]
-    h = hash_tokens_device_multi(
-        arr.reshape(-1, arr.shape[-1]), keys=mkb, family="multilinear_hm",
-        variable_length=True, backend=backend)[:, 0]
-    out = (h % np.uint32(n_shards)).astype(np.int32).reshape(batch_shape)
-    return out if np.asarray(tokens).ndim > 1 else out[0]
+    from ..hash import sharding
+
+    _warn("shard_assignment", "repro.hash.shard_assignment / Hasher.shard_ids")
+    return sharding.shard_assignment(tokens, n_shards, salt=salt,
+                                     backend=backend)

@@ -4,12 +4,12 @@ The Bloom filter's k index functions are k independent MULTILINEAR hashes
 (strong universality => the standard false-positive analysis holds with
 exact constants, not heuristics).
 
-All k key streams are materialized once at construction (`MultiKeyBuffer`)
--- the seed implementation regenerated O(k*n) keys per lookup by slicing
-overlapping windows out of one stream. Batch admission (`add_batch` /
-`contains_batch` / `check_and_add_batch`) routes every item through ONE
-fused multi-hash launch (DESIGN.md §3); single-item calls use the
-bit-identical vectorized host path over the same cached windows.
+Each structure owns one `Hasher` (repro.hash): k independent key streams
+bound to a `HashSpec` at construction -- explicit key operands, no process
+globals. Batch admission (`add_batch` / `contains_batch` /
+`check_and_add_batch`) routes every item through ONE fused multi-hash
+launch (DESIGN.md §3); single-item calls use the bit-identical vectorized
+host path over the same cached key windows.
 """
 from __future__ import annotations
 
@@ -17,8 +17,7 @@ import math
 
 import numpy as np
 
-from ..core.keys import MultiKeyBuffer
-from ..core.ops import hash_tokens_device_multi
+from ..hash import Hasher, HashSpec
 
 
 class BloomFilter:
@@ -35,14 +34,14 @@ class BloomFilter:
         self.k = max(1, int(self.m / n_items * math.log(2)))
         self.bits = np.zeros((self.m + 63) // 64, np.uint64)
         self.backend = backend
-        # k independent hash functions = k key streams, cached for life
-        self.mkb = MultiKeyBuffer(seed=seed, n_hashes=self.k)
+        # k independent hash functions = one K-stream Hasher, kept for life
+        self.hasher = Hasher.from_spec(HashSpec(
+            family="multilinear", n_hashes=self.k, out_bits=64,
+            variable_length=True, seed=seed))
 
     def _hashes(self, items, backend=None) -> np.ndarray:
         """(B, k) uint64 accumulators -- ONE fused launch for the whole batch."""
-        return hash_tokens_device_multi(
-            items, keys=self.mkb, family="multilinear", out_bits=64,
-            variable_length=True, backend=backend or self.backend)
+        return self.hasher.hash_batch(items, backend=backend or self.backend)
 
     def _indices(self, item: np.ndarray) -> np.ndarray:
         """(k,) probe indices for one item (vectorized host path: same
@@ -84,16 +83,17 @@ class ExactDedup:
     ~N^2 / 2^65 (strong universality): negligible below ~10^8 docs."""
 
     def __init__(self, seed: int = 0xDED0, backend: str | None = None):
-        self.mkb = MultiKeyBuffer(seed=seed, n_hashes=1)
+        self.hasher = Hasher.from_spec(HashSpec(
+            family="multilinear", n_hashes=1, out_bits=64,
+            variable_length=True, seed=seed))
         self.backend = backend
         self.seen: set[int] = set()
 
     def _fingerprints(self, items, backend=None) -> np.ndarray:
         """(B,) uint64 variable-length fingerprints, one launch per batch
         (bit-identical to the seed's append-1 numpy formula)."""
-        return hash_tokens_device_multi(
-            items, keys=self.mkb, family="multilinear", variable_length=True,
-            out_bits=64, backend=backend or self.backend)[:, 0]
+        return self.hasher.hash_batch(
+            items, backend=backend or self.backend)[:, 0]
 
     def check_and_add(self, tokens: np.ndarray) -> bool:
         """True if new (admitted), False if duplicate."""

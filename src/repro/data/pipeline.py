@@ -6,10 +6,11 @@ Every routing decision is a strongly universal hash of the *content*:
   - global shuffle:     sort by salted h(doc)      (reproducible epochs)
   - dedup:              64-bit fingerprint set / Bloom filter
 All three routing hashes (dedup fingerprint, split, shard) are independent
-MULTILINEAR functions evaluated as ONE K=3 pass through the fused multi-hash
-engine (DESIGN.md §3): `admit_batch` hashes a whole batch of documents in a
-single launch; `admit` uses the bit-identical vectorized host path, so
-streaming and batched admission route every document the same way.
+MULTILINEAR functions evaluated as ONE K=3 pass through a single `Hasher`
+(DESIGN.md §3/§6) whose spec binds the three purpose seeds as explicit key
+streams: `admit_batch` hashes a whole batch of documents in a single
+launch; `admit` uses the bit-identical vectorized host path, so streaming
+and batched admission route every document the same way.
 """
 from __future__ import annotations
 
@@ -18,8 +19,7 @@ from typing import Iterator
 
 import numpy as np
 
-from ..core.keys import KeyBuffer, MultiKeyBuffer
-from ..core.ops import hash_tokens_device_multi, hash_tokens_host
+from ..hash import Hasher, HashSpec
 
 # Per-purpose base seeds for the fused triple (stream order: fp, split, shard)
 _FP_SEED = 0xF1F0
@@ -53,9 +53,10 @@ class HashPipeline:
     def __init__(self, cfg: PipelineConfig):
         self.cfg = cfg
         self.seen_fingerprints: set[int] = set()
-        # fp / split / shard as one fused 3-hash key set
-        self.route_keys = MultiKeyBuffer(
-            seeds=[_FP_SEED, _SPLIT_SEED, _SHARD_SEED])
+        # fp / split / shard as one fused 3-hash Hasher (explicit seeds)
+        self.route_hasher = Hasher.from_spec(HashSpec(
+            family="multilinear", n_hashes=3, out_bits=64,
+            variable_length=True, seed=(_FP_SEED, _SPLIT_SEED, _SHARD_SEED)))
         self.stats = {"docs": 0, "dup": 0, "eval": 0, "other_shard": 0, "kept": 0}
 
     def _route_hashes(self, docs, backend: str | None = None) -> np.ndarray:
@@ -66,9 +67,7 @@ class HashPipeline:
         universality (Thm 3.1) holds for the finished hash, not the raw
         accumulator's low bits.
         """
-        return hash_tokens_device_multi(
-            docs, keys=self.route_keys, family="multilinear",
-            variable_length=True, out_bits=64, backend=backend)
+        return self.route_hasher.hash_batch(docs, backend=backend)
 
     def _route_one(self, fp: int, h_split: int, h_shard: int) -> str:
         c = self.cfg
@@ -110,8 +109,10 @@ class HashPipeline:
         words = np.empty((len(doc_hashes), 2), np.uint32)
         words[:, 0] = doc_hashes & 0xFFFFFFFF
         words[:, 1] = doc_hashes >> 32 if doc_hashes.dtype == np.uint64 else 0
-        kb = KeyBuffer(seed=0xE90C ^ (epoch * 0x9E37))
-        order_keys = hash_tokens_host(words, family="multilinear_hm", keys=kb)
+        salted = Hasher.from_spec(HashSpec(
+            family="multilinear_hm", variable_length=True,
+            seed=0xE90C ^ (epoch * 0x9E37)))
+        order_keys = salted.hash_batch(words, backend="host")[:, 0]
         return np.argsort(order_keys, kind="stable")
 
     def pack(self, docs: Iterator[np.ndarray]) -> Iterator[dict]:

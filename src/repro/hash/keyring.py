@@ -1,0 +1,75 @@
+"""Deterministic default key material, without process-global mutable state.
+
+The legacy API kept a module-global `KeyBuffer` plus an ad-hoc per-salt dict
+with an oldest-inserted eviction loop (`core.ops._SHARD_KEYS`). Keys are now
+explicit operands of `Hasher`; this module only provides the *deterministic
+defaults* -- pure functions of the spec -- behind a small bounded LRU so hot
+callers (per-salt shard routing, the deprecation shims) don't regenerate
+Philox streams or re-upload planes on every call.
+
+Everything here is a cache of pure functions: evicting an entry can change
+cost, never values.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from ..core.keys import KeyBuffer, MultiKeyBuffer
+from .hasher import Hasher, HashPlan
+from .spec import DEFAULT_SEED, HashSpec
+
+_BUFFERS: "OrderedDict[tuple, MultiKeyBuffer]" = OrderedDict()
+_HASHERS: "OrderedDict[tuple, Hasher]" = OrderedDict()
+_MAX_ENTRIES = 32
+
+
+def _lru_get(cache: OrderedDict, key, make):
+    hit = cache.get(key)
+    if hit is not None:
+        cache.move_to_end(key)
+        return hit
+    val = cache[key] = make()
+    while len(cache) > _MAX_ENTRIES:
+        cache.popitem(last=False)  # true LRU: least-recently-USED goes first
+    return val
+
+
+def clear():
+    """Drop all cached default key material (tests; values never change)."""
+    _BUFFERS.clear()
+    _HASHERS.clear()
+
+
+def buffer_for(spec: HashSpec) -> MultiKeyBuffer:
+    """The spec's deterministic K-stream key buffer (LRU-shared)."""
+    seeds = spec.stream_seeds()
+    return _lru_get(_BUFFERS, seeds,
+                    lambda: MultiKeyBuffer(seeds=list(seeds)))
+
+
+def key_buffer(seed: int = DEFAULT_SEED) -> KeyBuffer:
+    """Single-stream `KeyBuffer(seed)` equivalent: stream 0 of the spec's
+    buffer (bit-identical to the legacy process-global buffer)."""
+    return buffer_for(HashSpec(seed=seed)).buffers[0]
+
+
+def hasher_for(spec: HashSpec, *, max_len: int = 256,
+               plan: HashPlan | None = None) -> Hasher:
+    """LRU-cached `Hasher` for a spec (shared key buffer AND device planes,
+    so repeated default-keyed calls hit the same jit cache entries).
+
+    Capacity is pow2-bucketed: asking for a longer `max_len` replaces the
+    cache entry with a wider Hasher over the SAME streams (values extend).
+    """
+    mkb = buffer_for(spec)
+    key = (spec, plan)
+    h = _HASHERS.get(key)
+    if h is None or h.capacity < max(2, max_len + 2):
+        h = Hasher.from_keys(mkb, spec, max_len=max_len, plan=plan)
+        _HASHERS[key] = h
+        _HASHERS.move_to_end(key)
+        while len(_HASHERS) > _MAX_ENTRIES:
+            _HASHERS.popitem(last=False)
+    else:
+        _HASHERS.move_to_end(key)
+    return h

@@ -1,0 +1,48 @@
+"""Content-addressed shard routing on the Hasher engine.
+
+Uniformity of the strongly universal family makes shard loads balanced in
+expectation (paper §1); range reduction uses Lemire's multiply-shift
+``(h * n_shards) >> 32`` on the uint64-widened 32-bit hash instead of
+``h % n_shards`` -- the modulo's low-bit bias is gone and the reduction is
+one multiply, no division. The jit-native equivalent is
+`Hasher.shard_ids` (same formula, limb arithmetic, composes under jit).
+
+Per-salt key material comes from the keyring's bounded LRU -- the legacy
+`_SHARD_KEYS` module-global dict with its ad-hoc oldest-inserted eviction
+loop is gone.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.keys import _GOLDEN64
+from . import keyring
+from .spec import DEFAULT_SEED, HashSpec
+
+
+def salt_spec(salt: int = 0, n_hashes: int = 1) -> HashSpec:
+    """The routing spec for a salt (same seed derivation as the legacy
+    per-salt cache, so the underlying 32-bit hashes are unchanged)."""
+    seed = DEFAULT_SEED ^ (salt * _GOLDEN64 % (1 << 63))
+    return HashSpec(family="multilinear_hm", n_hashes=n_hashes,
+                    variable_length=True, seed=seed)
+
+
+def reduce_range(h: np.ndarray, n_shards: int) -> np.ndarray:
+    """Lemire multiply-shift: uniform map of uint32 hashes onto [0, n)."""
+    return ((h.astype(np.uint64) * np.uint64(n_shards)) >> np.uint64(32)
+            ).astype(np.int32)
+
+
+def shard_assignment(tokens: np.ndarray, n_shards: int, salt: int = 0,
+                     backend: str | None = None) -> np.ndarray:
+    """Deterministic shard id per row of (..., n) tokens (host convenience;
+    one fused launch per batch). For in-graph routing use
+    `Hasher.shard_ids` with an explicit Hasher operand."""
+    arr = np.atleast_2d(np.asarray(tokens, np.uint32))
+    batch_shape = arr.shape[:-1]
+    hasher = keyring.hasher_for(salt_spec(salt))
+    h = hasher.hash_batch(arr.reshape(-1, arr.shape[-1]),
+                          out_bits=32, backend=backend)[:, 0]
+    out = reduce_range(h, n_shards).reshape(batch_shape)
+    return out if np.asarray(tokens).ndim > 1 else out[0]

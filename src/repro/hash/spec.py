@@ -1,0 +1,69 @@
+"""`HashSpec` -- the immutable description of a hash *function family member*.
+
+CLHASH (Lemire & Kaser 2015) and Thorup's integer/string hashing notes both
+frame a hash as a keyed object: a *scheme* (which family, how many
+independent functions, how many output bits, whether the variable-length
+append-1 policy applies) plus *key material*. `HashSpec` is the scheme half;
+`Hasher` (hasher.py) binds a spec to concrete key planes.
+
+The spec is a frozen dataclass so it is hashable and can ride in a pytree's
+static aux data: two `Hasher`s with equal specs and plans share jit caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.keys import derive_stream_seed
+
+# "LEKA" -- Lemire/Kaser. The process-wide default seed of the legacy
+# free-function API; keyring reuses it so defaults stay bit-compatible.
+DEFAULT_SEED = 0x1E53
+
+#: Families implemented by the engine (kernels/multihash.py + hostref.py).
+FAMILY_NAMES = ("multilinear", "multilinear_2x2", "multilinear_hm")
+
+
+@dataclasses.dataclass(frozen=True)
+class HashSpec:
+    """Scheme half of a hash function: everything except the random keys.
+
+    family:          one of FAMILY_NAMES (paper §2-§3).
+    n_hashes:        K independent functions evaluated per call (k-probe
+                     Bloom, fingerprint/split/shard triples, ...).
+    out_bits:        32 -> the paper's finished ``>> 32`` hash (uint32);
+                     64 -> the full mod-2^64 accumulator (fingerprints).
+    variable_length: apply the paper's append-1 rule (prefix-safe hashing
+                     of variable-length strings) vs raw fixed-length.
+    seed:            int -> stream j uses `derive_stream_seed(seed, j)`;
+                     tuple of K ints -> explicit per-stream base seeds
+                     (e.g. the pipeline's fp/split/shard salts).
+    """
+
+    family: str = "multilinear"
+    n_hashes: int = 1
+    out_bits: int = 32
+    variable_length: bool = True
+    seed: "int | tuple[int, ...]" = DEFAULT_SEED
+
+    def __post_init__(self):
+        if self.family not in FAMILY_NAMES:
+            raise KeyError(f"unknown family {self.family!r}; have {FAMILY_NAMES}")
+        if self.n_hashes < 1:
+            raise ValueError(f"n_hashes must be >= 1, got {self.n_hashes}")
+        if self.out_bits not in (32, 64):
+            raise ValueError(f"out_bits must be 32 or 64, got {self.out_bits}")
+        if isinstance(self.seed, tuple) and len(self.seed) != self.n_hashes:
+            raise ValueError(
+                f"explicit seed tuple has {len(self.seed)} entries for "
+                f"n_hashes={self.n_hashes}")
+
+    def stream_seeds(self) -> tuple[int, ...]:
+        """Per-stream Philox base seeds (stream 0 of an int seed reproduces
+        ``KeyBuffer(seed)`` exactly -- the legacy global-key compatibility)."""
+        if isinstance(self.seed, tuple):
+            return tuple(int(s) for s in self.seed)
+        return tuple(derive_stream_seed(self.seed, j)
+                     for j in range(self.n_hashes))
+
+    def with_(self, **changes) -> "HashSpec":
+        return dataclasses.replace(self, **changes)

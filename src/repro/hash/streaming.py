@@ -1,0 +1,269 @@
+"""Incremental fingerprints: the two-level UMAC-style Multilinear tree,
+generalized from host byte buffers (`fingerprint_bytes`) to device token
+streams (`Hasher.stream()/.update()/.digest()`).
+
+Construction (strongly universal at each level, paper §3 + UMAC's tree
+trick): the stream is split into fixed `chunk_words` chunks; each complete
+chunk gets a 64-bit level-1 MULTILINEAR fingerprint (stream 0 of the
+Hasher's keys); the sequence of chunk fingerprints -- as (lo, hi) 32-bit
+word pairs -- is itself MULTILINEAR-hashed by an independent level-2 key
+stream, accumulated *incrementally* (the level-2 sum is associative, so each
+finished chunk folds in as `k_{2g+1}*lo_g + k_{2g+2}*hi_g` the moment it
+completes). `digest` absorbs the final partial chunk plus a (total_words,
+n_chunks) length pair, restoring the injectivity the host path gets from its
+length prefix. Arbitrarily long streams need only `chunk_words` level-1 keys
+plus 2 level-2 keys per chunk, up to the static `max_chunks` bound.
+
+`update`/`digest` are pure JAX (no host syncs): `StreamState` is a
+registered pytree, so the whole absorb/finalize loop runs under `jit` --
+e.g. fingerprinting token batches inside a jitted data-ingest step.
+
+The host `fingerprint_bytes` (checkpoint integrity) lives here too; it keeps
+the legacy byte-level layout (length prefix first) bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import hostref, limbs
+from ..core import multilinear as ml
+from ..core.keys import KeyBuffer, split_hi_lo
+from .spec import DEFAULT_SEED
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+# Domain-separation tag for the level-2 key stream: independent of every
+# level-1 stream (which use derive_stream_seed(seed, j) = seed ^ j*GOLDEN64).
+_L2_TAG = 0x5ECD_1EE7_F1F0_57A9
+
+
+def level2_seed(stream0_seed: int) -> int:
+    return (int(stream0_seed) ^ _L2_TAG) % (1 << 64)
+
+
+@dataclasses.dataclass
+class StreamState:
+    """Pytree state of one incremental fingerprint.
+
+    buf/fill:        the current partial chunk (zeros beyond `fill`).
+    acc_hi/acc_lo:   running level-2 sum over finished chunk fingerprints.
+    count:           chunks finished so far (level-2 key cursor).
+    l2_hi/l2_lo:     level-2 key planes (index 0 = level-2 m1).
+    chunk_words/max_chunks: static tree structure (aux data).
+    """
+
+    buf: jnp.ndarray
+    fill: jnp.ndarray
+    acc_hi: jnp.ndarray
+    acc_lo: jnp.ndarray
+    count: jnp.ndarray
+    l2_hi: jnp.ndarray
+    l2_lo: jnp.ndarray
+    chunk_words: int
+    max_chunks: int
+
+
+jax.tree_util.register_pytree_node(
+    StreamState,
+    lambda s: ((s.buf, s.fill, s.acc_hi, s.acc_lo, s.count, s.l2_hi, s.l2_lo),
+               (s.chunk_words, s.max_chunks)),
+    lambda aux, ch: StreamState(*ch, *aux),
+)
+
+
+def init_stream(hasher, chunk_words: int, max_chunks: int) -> StreamState:
+    if chunk_words < 1:
+        raise ValueError("chunk_words must be >= 1")
+    if hasher.capacity < chunk_words:
+        raise ValueError(
+            f"Hasher capacity {hasher.capacity} < chunk_words {chunk_words}; "
+            f"build via Hasher.from_spec(spec, max_len={chunk_words})")
+    l2 = KeyBuffer(seed=level2_seed(hasher.spec.stream_seeds()[0]),
+                   initial=2 * max_chunks + 4)
+    l2_hi, l2_lo = split_hi_lo(l2.u64(2 * max_chunks + 3))
+    return StreamState(
+        buf=jnp.zeros((chunk_words,), U32),
+        fill=jnp.zeros((), I32),
+        acc_hi=jnp.zeros((), U32),
+        acc_lo=jnp.zeros((), U32),
+        count=jnp.zeros((), I32),
+        l2_hi=jnp.asarray(l2_hi),
+        l2_lo=jnp.asarray(l2_lo),
+        chunk_words=int(chunk_words),
+        max_chunks=int(max_chunks),
+    )
+
+
+def _check_overflow(state: StreamState, extra_tokens: int = 0) -> None:
+    """Fail LOUDLY when a stream would exceed its static max_chunks bound
+    (beyond it, jnp.take clips level-2 key indices and overflow chunks
+    would all fold with the same key pair -- silent digest corruption).
+
+    Checked eagerly whenever the counters are concrete; under jit the
+    counters are tracers (unverifiable in-graph without a callback), so the
+    host-side `digest_int` finalizer repeats the check on real values.
+    """
+    count, fill = state.count, state.fill
+    if isinstance(count, jax.core.Tracer) or isinstance(fill, jax.core.Tracer):
+        return
+    words = int(fill) + extra_tokens
+    # a trailing partial chunk consumes one more level-2 slot at digest time
+    chunks = int(count) + words // state.chunk_words + bool(words % state.chunk_words)
+    if chunks > state.max_chunks:
+        raise ValueError(
+            f"stream overflow: {chunks} chunks exceeds the static "
+            f"max_chunks={state.max_chunks} bound (rebuild the stream with "
+            f"a larger max_chunks or chunk_words)")
+
+
+def _level1_fp(hasher, rows):
+    """(C, chunk_words) uint32 rows -> ((C,) hi, (C,) lo) 64-bit chunk
+    fingerprints m1 + sum k_i * w_i (stream 0 keys; zeros beyond a row's
+    real fill contribute k*0 = 0, so no masking is needed)."""
+    cw = rows.shape[-1]
+    kh = hasher.key_hi[0, 1 : cw + 1]
+    kl = hasher.key_lo[0, 1 : cw + 1]
+    p_hi, p_lo = limbs.mul64_u32((kh[None, :], kl[None, :]), rows)
+    hi, lo = ml._reduce_sum64((p_hi, p_lo), axis=-1)
+    return limbs.add64(
+        (hi, lo),
+        (jnp.broadcast_to(hasher.key_hi[0, 0], hi.shape),
+         jnp.broadcast_to(hasher.key_lo[0, 0], lo.shape)))
+
+
+def _l2_term(state: StreamState, g, w_lo, w_hi):
+    """Level-2 contribution of word pair (w_lo, w_hi) at chunk cursor g:
+    k_{2g+1} * w_lo + k_{2g+2} * w_hi (64-bit limb arithmetic)."""
+    ka = (jnp.take(state.l2_hi, 2 * g + 1), jnp.take(state.l2_lo, 2 * g + 1))
+    kb = (jnp.take(state.l2_hi, 2 * g + 2), jnp.take(state.l2_lo, 2 * g + 2))
+    return limbs.add64(limbs.mul64_u32(ka, w_lo), limbs.mul64_u32(kb, w_hi))
+
+
+def update(hasher, state: StreamState, tokens) -> StreamState:
+    """Absorb a 1-D token block (static length; values cast to uint32).
+
+    Pure JAX: buffers the partial chunk, fingerprints every chunk completed
+    by this block (vectorized level-1 pass) and folds each into the running
+    level-2 sum at its stream position. Total chunks must stay below the
+    state's static `max_chunks` bound.
+    """
+    toks = jnp.asarray(tokens).reshape((-1,)).astype(U32)
+    n = toks.shape[0]
+    cw = state.chunk_words
+    if n == 0:
+        return state
+    _check_overflow(state, extra_tokens=n)
+    R = 1 + -(-n // cw)  # rows of the extended buffer (static)
+    ext = jnp.zeros((R * cw,), U32).at[:cw].set(state.buf)
+    ext = jax.lax.dynamic_update_slice(ext, toks, (state.fill,))
+    total = state.fill + n
+    c = total // cw  # chunks completed by this block (dynamic)
+    rows = ext.reshape(R, cw)
+    fp_hi, fp_lo = _level1_fp(hasher, rows)
+    g = state.count + jnp.arange(R, dtype=I32)
+    t_hi, t_lo = _l2_term(state, g, fp_lo, fp_hi)
+    done = jnp.arange(R, dtype=I32) < c
+    t_hi = jnp.where(done, t_hi, U32(0))
+    t_lo = jnp.where(done, t_lo, U32(0))
+    s_hi, s_lo = ml._reduce_sum64((t_hi, t_lo), axis=0)
+    acc_hi, acc_lo = limbs.add64((state.acc_hi, state.acc_lo), (s_hi, s_lo))
+    return StreamState(
+        buf=jax.lax.dynamic_slice(ext, (c * cw,), (cw,)),
+        fill=total - c * cw,
+        acc_hi=acc_hi,
+        acc_lo=acc_lo,
+        count=state.count + c,
+        l2_hi=state.l2_hi,
+        l2_lo=state.l2_lo,
+        chunk_words=cw,
+        max_chunks=state.max_chunks,
+    )
+
+
+def digest(hasher, state: StreamState):
+    """Finalize to the (2,) uint32 (hi, lo) 64-bit fingerprint (pure JAX).
+
+    Absorbs the partial chunk (if any) and then a (total_words mod 2^32,
+    n_chunks) length pair as the last level-2 contribution -- so streams
+    that differ only by trailing zeros inside the final chunk, or by an
+    empty final chunk, digest differently.
+    """
+    fh, fl = _level1_fp(hasher, state.buf[None, :])
+    has = (state.fill > 0).astype(I32)
+    p_hi, p_lo = _l2_term(state, state.count, fl[0], fh[0])
+    p_hi = jnp.where(has == 1, p_hi, U32(0))
+    p_lo = jnp.where(has == 1, p_lo, U32(0))
+    acc_hi, acc_lo = limbs.add64((state.acc_hi, state.acc_lo), (p_hi, p_lo))
+    ce = state.count + has
+    tot = (state.count.astype(U32) * U32(state.chunk_words)
+           + state.fill.astype(U32))
+    f_hi, f_lo = _l2_term(state, ce, tot, ce.astype(U32))
+    acc_hi, acc_lo = limbs.add64((acc_hi, acc_lo), (f_hi, f_lo))
+    out_hi, out_lo = limbs.add64((acc_hi, acc_lo),
+                                 (state.l2_hi[0], state.l2_lo[0]))
+    return jnp.stack([out_hi, out_lo])
+
+
+def stream_digest_host(hasher, tokens, chunk_words: int,
+                       max_chunks: int = 4096) -> int:
+    """Numpy uint64 reference of stream()/update()/digest() over the whole
+    token sequence at once -- the ground truth for the incremental device
+    path (tests assert bit-equality and split-invariance against this)."""
+    toks = np.asarray(tokens, np.uint32).reshape(-1)
+    k1 = hasher._mkb.buffers[0].u64(chunk_words + 1)
+    l2 = KeyBuffer(seed=level2_seed(hasher.spec.stream_seeds()[0]),
+                   initial=2 * max_chunks + 4).u64(2 * max_chunks + 3)
+    with np.errstate(over="ignore"):
+        n = len(toks)
+        count, fill = n // chunk_words, n % chunk_words
+        acc = np.uint64(0)
+        for j in range(count + (1 if fill else 0)):
+            chunk = np.zeros(chunk_words, np.uint32)
+            part = toks[j * chunk_words : (j + 1) * chunk_words]
+            chunk[: len(part)] = part
+            fp = hostref.multilinear_np_u64(chunk, k1)
+            acc += l2[2 * j + 1] * np.uint64(fp & np.uint64(0xFFFFFFFF))
+            acc += l2[2 * j + 2] * np.uint64(fp >> np.uint64(32))
+        ce = count + (1 if fill else 0)
+        tot = np.uint64((count * chunk_words + fill) & 0xFFFFFFFF)
+        acc += l2[2 * ce + 1] * tot + l2[2 * ce + 2] * np.uint64(ce)
+        return int(acc + l2[0])
+
+
+def fingerprint_bytes(data: bytes, *, seed: int = DEFAULT_SEED, keys=None,
+                      chunk_words: int = 1 << 16) -> int:
+    """64-bit Multilinear fingerprint of a byte string (checkpoint integrity).
+
+    Bytes are padded to a whole number of 32-bit words, length-prepended
+    (paper's variable-length extension: prepend |s|, then the content), and
+    folded chunkwise: chunk fingerprints are themselves a string of 64-bit
+    values hashed again, so arbitrarily long buffers need only `chunk_words`
+    keys (two-level tree -- same trick UMAC uses, strongly universal at each
+    level). Bit-identical to the legacy `core.ops.fingerprint_bytes`.
+    """
+    from . import keyring
+
+    kb = keys if keys is not None else keyring.key_buffer(seed)
+    n_bytes = len(data)
+    pad = (-n_bytes) % 4
+    arr = np.frombuffer(data + b"\0" * pad, dtype="<u4")
+    arr = np.concatenate(
+        [np.asarray([n_bytes & 0xFFFFFFFF, n_bytes >> 32], np.uint32), arr])
+    ku = kb.u64(chunk_words + 1)
+    fps = []
+    for i in range(0, len(arr), chunk_words):
+        chunk = arr[i : i + chunk_words]
+        fps.append(hostref.multilinear_np_u64(chunk.astype(np.uint32), ku))
+    if len(fps) == 1:
+        return int(fps[0])
+    # level 2: hash the vector of 64-bit fingerprints as 32-bit halves
+    flat = np.asarray(fps, dtype=np.uint64)
+    words = np.empty(2 * len(flat), np.uint32)
+    words[0::2] = (flat & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    words[1::2] = (flat >> np.uint64(32)).astype(np.uint32)
+    return int(hostref.multilinear_np_u64(words, kb.u64(len(words) + 1)))

@@ -18,8 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.keys import MultiKeyBuffer
-from ..core.ops import hash_tokens_device_multi
+from ..hash import Hasher, HashSpec
 
 _PREFIX_KEY_SEED = 0x1E53
 
@@ -45,7 +44,9 @@ class ServeEngine:
             lambda p, c, t, pos: api.decode_step(p, c, t, pos))
         self._prefill_cache = {}
         self._prefix_logit_cache: dict[int, np.ndarray] = {}
-        self._prefix_keys = MultiKeyBuffer(seed=_PREFIX_KEY_SEED, n_hashes=1)
+        self._prefix_hasher = Hasher.from_spec(HashSpec(
+            family="multilinear", n_hashes=1, out_bits=64,
+            variable_length=True, seed=_PREFIX_KEY_SEED))
         self._req_key_cache: dict[int, int] = {}
         self.slots: list[Request | None] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int64)
@@ -57,18 +58,16 @@ class ServeEngine:
     def _prompt_key(self, prompt: np.ndarray) -> int:
         """64-bit variable-length fingerprint of one prompt (host path --
         bit-identical to the batched device path used in submit_all)."""
-        return int(hash_tokens_device_multi(
-            [prompt.astype(np.uint32)], keys=self._prefix_keys,
-            out_bits=64, backend="host")[0, 0])
+        return int(self._prefix_hasher.hash_batch(
+            [prompt.astype(np.uint32)], backend="host")[0, 0])
 
     def _precompute_prompt_keys(self, requests: "list[Request]") -> None:
         """Fingerprint every pending prompt in ONE fused hash launch; keys
         land in a per-request cache consulted by _assign at admission."""
         if not requests:
             return
-        fps = hash_tokens_device_multi(
-            [r.prompt.astype(np.uint32) for r in requests],
-            keys=self._prefix_keys, out_bits=64)[:, 0]
+        fps = self._prefix_hasher.hash_batch(
+            [r.prompt.astype(np.uint32) for r in requests])[:, 0]
         for r, fp in zip(requests, fps):
             self._req_key_cache[r.req_id] = int(fp)
 

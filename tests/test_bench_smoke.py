@@ -12,7 +12,7 @@ def test_bench_harness_end_to_end(tmp_path, capsys, monkeypatch):
     monkeypatch.chdir(tmp_path)
     common.ROWS.clear()
     common.JSON_ROWS.clear()
-    run.main(["--fast", "--only", "kernels,multihash",
+    run.main(["--fast", "--only", "kernels,multihash,hasher",
               "--json", "BENCH_kernels.json"])
     out = capsys.readouterr().out
     assert out.startswith("name,us_per_call,derived")
@@ -33,6 +33,15 @@ def test_bench_harness_end_to_end(tmp_path, capsys, monkeypatch):
     host = next(r for n, r in rows.items() if "host-loop-seed" in n)
     fused = next(r for n, r in rows.items() if "fused-interpret" in n)
     assert fused["us_per_call"] < host["us_per_call"], (fused, host)
+
+    # acceptance: the Hasher object API tracks the legacy free-function
+    # path within noise (generous 2x bound -- a key-regeneration or
+    # per-call-upload regression would blow far past it)
+    legacy = next(r for n, r in rows.items()
+                  if "hasher_overhead" in n and "legacy-free-fn" in n)
+    obj = next(r for n, r in rows.items()
+               if "hasher_overhead" in n and "hash_batch" in n)
+    assert obj["us_per_call"] < 2.0 * legacy["us_per_call"], (obj, legacy)
 
 
 def test_bench_only_validation():

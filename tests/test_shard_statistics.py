@@ -1,7 +1,7 @@
 """Deterministic statistical tests on shard routing (no hypothesis needed)."""
 import numpy as np
 
-from repro.core import ops as cops
+from repro.hash import keyring, reduce_range, shard_assignment, sharding
 
 
 def test_shard_uniformity_chi2():
@@ -10,7 +10,7 @@ def test_shard_uniformity_chi2():
     rng = np.random.Generator(np.random.Philox(key=np.uint64(1)))
     rows = rng.integers(0, 2**32, size=(1 << 16, 4), dtype=np.uint64).astype(np.uint32)
     n_shards = 64
-    sh = cops.shard_assignment(rows, n_shards=n_shards)
+    sh = shard_assignment(rows, n_shards=n_shards)
     counts = np.bincount(sh, minlength=n_shards)
     expected = len(rows) / n_shards
     chi2 = ((counts - expected) ** 2 / expected).sum()
@@ -18,10 +18,54 @@ def test_shard_uniformity_chi2():
     assert chi2 < 119, f"shard loads too skewed: chi2={chi2}"
 
 
+def test_lemire_reduction_exact_and_unbiased():
+    """Lemire multiply-shift (h * n) >> 32: matches the uint64 formula
+    exactly, and over ALL residues of a stride covering [0, 2^32) the
+    bucket loads differ by at most 1 -- the modulo's low-bit bias is gone
+    (satellite: replaces `h % n_shards` on the 32-bit hash)."""
+    n = 13
+    h = np.arange(0, 2**32, 65537, dtype=np.uint64).astype(np.uint32)
+    got = reduce_range(h, n)
+    want = ((h.astype(np.uint64) * n) >> np.uint64(32)).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+    counts = np.bincount(got, minlength=n)
+    assert counts.max() - counts.min() <= 1, counts
+    assert got.min() == 0 and got.max() == n - 1
+
+
+def test_lemire_chi2_balance_many_shard_counts():
+    """Chi-square balance of the full shard_assignment path for shard
+    counts that do NOT divide 2^32 (where modulo bias would concentrate)."""
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(7)))
+    rows = rng.integers(0, 2**32, size=(1 << 14, 4), dtype=np.uint64).astype(np.uint32)
+    for n_shards, bound in [(3, 30), (7, 35), (48, 100)]:
+        sh = shard_assignment(rows, n_shards=n_shards)
+        counts = np.bincount(sh, minlength=n_shards)
+        expected = len(rows) / n_shards
+        chi2 = ((counts - expected) ** 2 / expected).sum()
+        # bound ~ mean + 5 * sd of chi2_{n-1}
+        assert chi2 < bound, f"n={n_shards}: chi2={chi2}, counts={counts}"
+
+
 def test_shard_determinism_and_salt_sensitivity():
     rng = np.random.Generator(np.random.Philox(key=np.uint64(2)))
     rows = rng.integers(0, 2**32, size=(128, 4), dtype=np.uint64).astype(np.uint32)
-    sh = cops.shard_assignment(rows, n_shards=13)
+    sh = shard_assignment(rows, n_shards=13)
     assert ((sh >= 0) & (sh < 13)).all()
-    np.testing.assert_array_equal(sh, cops.shard_assignment(rows, n_shards=13))
-    assert not (sh == cops.shard_assignment(rows, n_shards=13, salt=1)).all()
+    np.testing.assert_array_equal(sh, shard_assignment(rows, n_shards=13))
+    assert not (sh == shard_assignment(rows, n_shards=13, salt=1)).all()
+
+
+def test_host_and_device_paths_agree():
+    """shard ids from the host engine == the pure-JAX Hasher.shard_ids path
+    (same hashes, same Lemire reduction, different arithmetic substrate)."""
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(3)))
+    rows = rng.integers(0, 2**32, size=(64, 6), dtype=np.uint64).astype(np.uint32)
+    host = shard_assignment(rows, n_shards=29, salt=2)
+    h = keyring.hasher_for(sharding.salt_spec(2), max_len=6)
+    dev = np.asarray(jax.jit(lambda hs, t: hs.shard_ids(t, 29))(
+        h, jnp.asarray(rows)))
+    np.testing.assert_array_equal(host, dev)

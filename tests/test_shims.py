@@ -1,0 +1,121 @@
+"""Legacy `core.ops` deprecation shims: every entry point emits exactly one
+DeprecationWarning and produces bit-identical output to its `repro.hash`
+equivalent -- plus golden values pinned from the pre-refactor implementation
+so bit-compat holds across future refactors, not just against today's code."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hostref
+from repro.core import ops as cops
+from repro.core.keys import KeyBuffer, MultiKeyBuffer
+from repro.hash import Hasher, HashSpec, fingerprint_bytes, keyring, sharding
+
+TOKS = np.arange(1, 13, dtype=np.uint32).reshape(2, 6)
+
+# Golden outputs of the PRE-refactor free functions on TOKS (default seeds).
+GOLD_HOST_HM = [0xC9905092, 0x02DDFFB3]
+GOLD_HOST_ML_FIXED = [0x2C02BF0E, 0x65506E2F]
+GOLD_DEVICE_HM = [0xC2F3D4EA, 0xFC41840B]
+GOLD_MULTI_K2_S7 = [[1877131385, 718763065], [2650787571, 167150430]]
+GOLD_FP = 0x75D2926E1ADD9DB1
+
+
+def _one_warning(fn):
+    """Run fn capturing warnings; assert exactly one DeprecationWarning."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn()
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "repro.hash" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    return out
+
+
+def test_hash_tokens_host_shim():
+    got = _one_warning(lambda: cops.hash_tokens_host(TOKS))
+    np.testing.assert_array_equal(got, np.asarray(GOLD_HOST_HM, np.uint32))
+    # keys= and variable_length= surface
+    got = _one_warning(lambda: cops.hash_tokens_host(
+        TOKS, family="multilinear", variable_length=False))
+    np.testing.assert_array_equal(got, np.asarray(GOLD_HOST_ML_FIXED, np.uint32))
+    kb = KeyBuffer(seed=0x99)
+    got = _one_warning(lambda: cops.hash_tokens_host(TOKS, keys=kb))
+    want = keyring.hasher_for(HashSpec(family="multilinear_hm", seed=0x99)
+                              ).hash_batch(TOKS, backend="host")[:, 0]
+    np.testing.assert_array_equal(got, want)
+    # 1-D input keeps the scalar-shaped output contract
+    one = _one_warning(lambda: cops.hash_tokens_host(TOKS[0]))
+    assert one.shape == () and int(one) == GOLD_HOST_HM[0]
+
+
+def test_hash_tokens_host_shim_matches_seed_formula():
+    """Independent check against the raw numpy seed formula (append-1 then
+    even-pad, keys straight from the Philox stream)."""
+    s = np.pad(TOKS, [(0, 0), (0, 1)])
+    s[:, -1] = 1
+    s = np.pad(s, [(0, 0), (0, 1)])  # HM even pad
+    ku = KeyBuffer(seed=0x1E53).u64(s.shape[-1] + 1)
+    want = hostref.multilinear_hm_np(s, ku)
+    got = _one_warning(lambda: cops.hash_tokens_host(TOKS))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hash_tokens_device_shim():
+    got = _one_warning(lambda: np.asarray(
+        cops.hash_tokens_device(jnp.asarray(TOKS))))
+    np.testing.assert_array_equal(got, np.asarray(GOLD_DEVICE_HM, np.uint32))
+    # matches the legacy device formula: family fn + KeyBuffer planes
+    from repro.core import multilinear as ml
+    hi, lo = KeyBuffer(seed=0x1E53).hi_lo(TOKS.shape[1] + 1)
+    want = np.asarray(ml.multilinear_hm(
+        jnp.asarray(TOKS), jnp.asarray(hi), jnp.asarray(lo)))
+    np.testing.assert_array_equal(got, want)
+    # use_kernel routes through the kernel plan, same bits
+    gotk = _one_warning(lambda: np.asarray(
+        cops.hash_tokens_device(jnp.asarray(TOKS), use_kernel=True)))
+    np.testing.assert_array_equal(gotk, got)
+
+
+def test_hash_tokens_device_multi_shim():
+    got = _one_warning(lambda: cops.hash_tokens_device_multi(
+        TOKS, n_hashes=2, seed=7, backend="host"))
+    np.testing.assert_array_equal(got, np.asarray(GOLD_MULTI_K2_S7, np.uint32))
+    # explicit key-buffer surface == Hasher.from_keys
+    mkb = MultiKeyBuffer(seed=0xCE, n_hashes=3)
+    got = _one_warning(lambda: cops.hash_tokens_device_multi(
+        TOKS, keys=mkb, family="multilinear_hm", out_bits=64, backend="jnp"))
+    spec = HashSpec(family="multilinear_hm", n_hashes=3, out_bits=64,
+                    seed=tuple(mkb.seeds))
+    want = Hasher.from_keys(mkb, spec).hash_batch(TOKS, backend="jnp")
+    np.testing.assert_array_equal(got, want)
+    # legacy validation errors survive
+    with pytest.raises(ValueError):
+        _one_warning(lambda: cops.hash_tokens_device_multi(
+            TOKS, n_hashes=2, keys=mkb, backend="host"))
+    with pytest.raises(KeyError):
+        cops.hash_tokens_device_multi(TOKS, family="sha256", backend="host")
+
+
+def test_fingerprint_bytes_shim():
+    got = _one_warning(lambda: cops.fingerprint_bytes(b"strongly universal"))
+    assert got == GOLD_FP == fingerprint_bytes(b"strongly universal")
+    big = bytes(range(256)) * 1024
+    got = _one_warning(lambda: cops.fingerprint_bytes(big, chunk_words=1 << 10))
+    assert got == fingerprint_bytes(big, chunk_words=1 << 10)
+    kb = KeyBuffer(seed=0xAA)
+    got = _one_warning(lambda: cops.fingerprint_bytes(b"xyz", keys=kb))
+    assert got == fingerprint_bytes(b"xyz", seed=0xAA)
+
+
+def test_shard_assignment_shim():
+    rows = (np.arange(40, dtype=np.uint32) % 7).reshape(10, 4)
+    got = _one_warning(lambda: cops.shard_assignment(rows, 13, salt=3))
+    np.testing.assert_array_equal(got, sharding.shard_assignment(rows, 13, salt=3))
+
+
+def test_global_keys_shim():
+    kb = _one_warning(cops.global_keys)
+    np.testing.assert_array_equal(kb.u64(4), KeyBuffer(seed=0x1E53).u64(4))
