@@ -1,0 +1,104 @@
+"""Bench regression gate: compare a fresh run against the committed baseline.
+
+Compares by row NAME intersection, and ONLY between runs with the same
+`fast` flag: the committed `BENCH_kernels.json` is a full-size run, and at
+`--fast` smoke sizes fixed dispatch overhead dominates, so fast-vs-full
+ratios are size artifacts, not regressions. The default therefore re-runs
+the engine subset at FULL size (a couple of minutes). Metric per row:
+`cycles_per_byte_equiv` when both sides have it, else `us_per_call`.
+
+Rows above the tolerance band are flagged; the report is NON-BLOCKING by
+default (CI-runner timing noise, and cross-machine baselines) -- pass
+--strict to turn flags into a nonzero exit for perf-focused pipelines.
+
+Usage:
+  python -m benchmarks.check_regression                   # runs subset itself
+  python -m benchmarks.check_regression --fresh f.json    # compare saved run
+  python -m benchmarks.check_regression --tolerance 2.0 --strict
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# modules with throughput rows that exist at both --fast and full sizes
+_SMOKE_MODULES = "kernels,multihash,hasher,distributed"
+
+
+def load_rows(path: str) -> tuple[dict, bool]:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != "bench-v1":
+        raise SystemExit(f"{path}: unknown schema {data.get('schema')!r}")
+    return {r["name"]: r for r in data["rows"]}, bool(data.get("fast"))
+
+
+def compare(base: dict, fresh: dict, tolerance: float):
+    """Yield (name, metric, base_val, fresh_val, ratio, flagged) rows."""
+    for name in sorted(set(base) & set(fresh)):
+        b, f = base[name], fresh[name]
+        if b.get("cycles_per_byte_equiv") and f.get("cycles_per_byte_equiv"):
+            metric = "cycles/B"
+            bv, fv = b["cycles_per_byte_equiv"], f["cycles_per_byte_equiv"]
+        elif b["us_per_call"] > 0 and f["us_per_call"] > 0:
+            metric = "us/call"
+            bv, fv = b["us_per_call"], f["us_per_call"]
+        else:
+            continue
+        ratio = fv / bv
+        yield name, metric, bv, fv, ratio, ratio > tolerance
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_kernels.json")
+    ap.add_argument("--fresh", default=None,
+                    help="saved fresh run; omit to run the engine subset "
+                         f"({_SMOKE_MODULES}) in-process at full size")
+    ap.add_argument("--tolerance", type=float, default=2.5,
+                    help="flag rows slower than tolerance x baseline "
+                         "(default 2.5: CPU-runner noise band)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any row is flagged (default: report "
+                         "only -- the CI step is non-blocking)")
+    args = ap.parse_args(argv)
+
+    base, base_fast = load_rows(args.baseline)
+    if args.fresh:
+        fresh, fresh_fast = load_rows(args.fresh)
+    else:
+        import tempfile
+
+        from . import run as bench_run
+
+        with tempfile.NamedTemporaryFile(suffix=".json") as tmp:
+            bench_run.main(["--only", _SMOKE_MODULES, "--json", tmp.name])
+            fresh, fresh_fast = load_rows(tmp.name)
+
+    if base_fast != fresh_fast:
+        print(f"# baseline fast={base_fast} vs fresh fast={fresh_fast}: "
+              "sizes differ, ratios would be size artifacts -- not comparing")
+        return 0
+    rows = list(compare(base, fresh, args.tolerance))
+    if not rows:
+        print("# no comparable rows between baseline and fresh run")
+        return 0
+    flagged = [r for r in rows if r[5]]
+    width = max(len(r[0]) for r in rows)
+    print(f"# regression report: baseline={args.baseline} "
+          f"tolerance={args.tolerance}x ({len(rows)} comparable rows)")
+    print(f"{'name':<{width}}  metric    baseline      fresh      ratio")
+    for name, metric, bv, fv, ratio, bad in rows:
+        mark = "  << REGRESSION" if bad else ""
+        print(f"{name:<{width}}  {metric:<8}{bv:>10.3f} {fv:>10.3f} "
+              f"{ratio:>9.2f}x{mark}")
+    if flagged:
+        print(f"# {len(flagged)} row(s) above the {args.tolerance}x band")
+        return 1 if args.strict else 0
+    print("# all rows within the tolerance band")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,6 @@ import json
 import time
 
 import jax
-import numpy as np
 
 ROWS = []
 JSON_ROWS = []

@@ -1,0 +1,139 @@
+"""Distributed scale-out bench: ShardedHasher / DeviceShardedBloom vs the
+single-device engine, emitting BENCH_distributed.json.
+
+Two entry points:
+
+- `run()` (the `distributed` module of `benchmarks.run`): benches on the
+  LIVE device set -- on the 1-device CI runner this measures the shard_map
+  degrade overhead (mesh of size 1, same code path), which must stay small.
+- `python -m benchmarks.distributed_bench --devices D` (standalone): re-execs
+  itself in a subprocess with D fake host CPU devices
+  (`--xla_force_host_platform_device_count`, the dry-run contract: only a
+  subprocess pins a device count) and writes BENCH_distributed.json with
+  single-device vs D-device rows.
+
+CPU fake devices share the physical cores, so D-device CPU rows measure the
+COLLECTIVE LAYOUT cost (shard_map partitioning, psum round-trips), not real
+scaling; on a TPU mesh the same rows become the actual throughput claim.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from . import common
+from .common import row, timeit
+
+
+def _items(B: int, L: int) -> np.ndarray:
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(0xD157)))
+    return rng.integers(0, 2**32, size=(B, L), dtype=np.uint64).astype(np.uint32)
+
+
+def _bench_meshes(meshes: "list[tuple[str, object]]") -> None:
+    """Per-mesh rows for the sharded hash engine + sharded Bloom admission.
+
+    meshes: (tag, mesh-or-None) pairs; None = plain single-device Hasher /
+    BloomFilter reference rows.
+    """
+    from repro.data.dedup import BloomFilter
+    from repro.hash import DeviceShardedBloom, Hasher, HashSpec
+
+    fast = common.FAST
+    B = 512 if fast else 4096
+    L, K = 16, 4
+    toks = _items(B, L)
+    n_bytes = B * L * 4
+    reps = 1 if fast else 3
+
+    spec = HashSpec(family="multilinear", n_hashes=K, seed=0xD157)
+    for tag, mesh in meshes:
+        if mesh is None:
+            hasher = Hasher.from_spec(spec, max_len=L)
+            fn = lambda: hasher.hash_batch(toks, backend="jnp")  # noqa: E731
+        else:
+            sharded = Hasher.from_spec(spec, max_len=L).sharded(mesh)
+            fn = lambda: sharded.hash_batch(toks)  # noqa: E731
+        t = timeit(fn, repeats=reps, inner=1, warmup=1)
+        row(f"distributed/hash_batch/B{B}xK{K}/{tag}", t * 1e6,
+            "single-device engine" if mesh is None else
+            f"shard_map over {tag}", n_bytes=n_bytes)
+
+    for tag, mesh in meshes:
+        if mesh is None:
+            bf = BloomFilter(n_items=B, fp_rate=1e-3)
+
+            def fn(bf=bf):
+                bf.add_batch(toks)
+                return bf.contains_batch(toks)
+        else:
+            dsb = DeviceShardedBloom(n_items=B, fp_rate=1e-3, mesh=mesh)
+
+            def fn(dsb=dsb):
+                dsb.add_batch(toks)
+                return dsb.contains_batch(toks)
+        t = timeit(fn, repeats=reps, inner=1, warmup=1)
+        row(f"distributed/bloom{B}/add+contains/{tag}", t * 1e6,
+            "host packed-word filter" if mesh is None else
+            f"range-partitioned bits, one psum ({tag})", n_bytes=n_bytes)
+
+
+def run() -> None:
+    """benchmarks.run module hook: live device set (D=1 on the CI runner)."""
+    from repro.parallel.sharding import data_mesh
+
+    mesh = data_mesh()
+    d = mesh.devices.size
+    _bench_meshes([("single", None), (f"D{d}", mesh)])
+
+
+def _child(json_path: str) -> None:
+    """Subprocess body: D fake devices are live; bench D=1 vs D=full."""
+    from repro.parallel.sharding import data_mesh
+
+    full = data_mesh()
+    d = full.devices.size
+    _bench_meshes([("single", None), ("D1", data_mesh(max_devices=1)),
+                   (f"D{d}", full)])
+    payload = {"schema": "bench-v1", "ref_hz": common.REF_HZ,
+               "fast": common.FAST, "devices": d, "rows": common.JSON_ROWS}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {len(common.JSON_ROWS)} rows -> {json_path}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=4,
+                    help="fake host device count for the subprocess mesh")
+    ap.add_argument("--fast", action="store_true",
+                    help="small sizes / few repeats (CI smoke)")
+    ap.add_argument("--json", default="BENCH_distributed.json")
+    ap.add_argument("--_child", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    common.FAST = bool(args.fast)
+
+    if args._child:
+        _child(args.json)
+        return
+
+    env = dict(
+        os.environ, JAX_PLATFORMS="cpu",
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={args.devices}",
+        PYTHONPATH=os.pathsep.join(
+            p for p in ("src", os.environ.get("PYTHONPATH", "")) if p))
+    cmd = [sys.executable, "-m", "benchmarks.distributed_bench", "--_child",
+           "--devices", str(args.devices), "--json", args.json]
+    if args.fast:
+        cmd.append("--fast")
+    out = subprocess.run(cmd, env=env)
+    sys.exit(out.returncode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,6 @@
 """Generate the EXPERIMENTS.md roofline/dry-run tables from results/dryrun."""
 from __future__ import annotations
 
-import json
 
 from .roofline import load_results, roofline_row
 

@@ -12,6 +12,9 @@ cycles/byte-equivalent) so the perf trajectory has a committed baseline.
   kernels -- Pallas kernel VMEM/roofline model + interpret sanity
   multihash -- fused K-function engine vs seed host Bloom loop
   hasher  -- Hasher object API vs legacy free functions (overhead ~0)
+  distributed -- shard_map scale-out engine vs single-device (live devices;
+            see benchmarks/distributed_bench.py --devices N for a forced
+            multi-device run emitting BENCH_distributed.json)
   roofline-- dry-run roofline terms (if results/dryrun exists)
 
 Flags: --fast (CI smoke sizes), --json PATH (default BENCH_kernels.json),
@@ -43,8 +46,9 @@ def main(argv=None) -> None:
 
     from types import SimpleNamespace
 
-    from . import (gf_variants, hasher_bench, kernels_bench, multihash_bench,
-                   table2_multilinear, table3_common, table4_nh, wordsize)
+    from . import (distributed_bench, gf_variants, hasher_bench,
+                   kernels_bench, multihash_bench, table2_multilinear,
+                   table3_common, table4_nh, wordsize)
 
     def _roofline_run():
         import os
@@ -65,6 +69,7 @@ def main(argv=None) -> None:
         "kernels": kernels_bench,
         "multihash": multihash_bench,
         "hasher": hasher_bench,
+        "distributed": distributed_bench,
         "roofline": SimpleNamespace(run=_roofline_run),
     }
     only = [s for s in args.only.split(",") if s]

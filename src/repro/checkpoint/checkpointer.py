@@ -27,7 +27,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..hash import fingerprint_bytes
-from ..parallel import sharding as sh
 
 
 def _leaf_path(kp) -> str:

@@ -9,9 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any
 
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

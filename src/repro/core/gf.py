@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import limbs
 
 U32 = jnp.uint32
 POLY_LOW = 0xC5  # 1 + x^2 + x^6 + x^7  (low part of p; bit 32 implied)

@@ -14,7 +14,6 @@ Everything here is numpy (exhaustive enumeration is host-side test code).
 from __future__ import annotations
 
 from fractions import Fraction
-from itertools import product
 
 import numpy as np
 

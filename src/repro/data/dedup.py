@@ -80,20 +80,30 @@ class BloomFilter:
 
 class ExactDedup:
     """64-bit fingerprint set. Collision probability for N docs is
-    ~N^2 / 2^65 (strong universality): negligible below ~10^8 docs."""
+    ~N^2 / 2^65 (strong universality): negligible below ~10^8 docs.
 
-    def __init__(self, seed: int = 0xDED0, backend: str | None = None):
+    With `mesh`, batched fingerprinting scales out over the mesh data axis
+    (`repro.hash.distributed.ShardedHasher`): B/D rows hashed per device,
+    bit-identical values, so admission decisions are unchanged. The seen-set
+    itself stays host-side -- it is the sequential arrival-order authority.
+    """
+
+    def __init__(self, seed: int = 0xDED0, backend: str | None = None,
+                 mesh=None):
         self.hasher = Hasher.from_spec(HashSpec(
             family="multilinear", n_hashes=1, out_bits=64,
             variable_length=True, seed=seed))
         self.backend = backend
+        self._sharded = self.hasher.sharded(mesh) if mesh is not None else None
         self.seen: set[int] = set()
 
     def _fingerprints(self, items, backend=None) -> np.ndarray:
         """(B,) uint64 variable-length fingerprints, one launch per batch
         (bit-identical to the seed's append-1 numpy formula)."""
-        return self.hasher.hash_batch(
-            items, backend=backend or self.backend)[:, 0]
+        backend = backend or self.backend
+        if self._sharded is not None and backend is None:
+            return self._sharded.hash_batch(items)[:, 0]
+        return self.hasher.hash_batch(items, backend=backend)[:, 0]
 
     def check_and_add(self, tokens: np.ndarray) -> bool:
         """True if new (admitted), False if duplicate."""

@@ -50,13 +50,17 @@ class HashPipeline:
     hash evaluation -- fused into one launch per batch in `admit_batch`.
     """
 
-    def __init__(self, cfg: PipelineConfig):
+    def __init__(self, cfg: PipelineConfig, mesh=None):
         self.cfg = cfg
         self.seen_fingerprints: set[int] = set()
         # fp / split / shard as one fused 3-hash Hasher (explicit seeds)
         self.route_hasher = Hasher.from_spec(HashSpec(
             family="multilinear", n_hashes=3, out_bits=64,
             variable_length=True, seed=(_FP_SEED, _SPLIT_SEED, _SHARD_SEED)))
+        # mesh-parallel routing: batched hashing partitioned over the mesh
+        # data axis (bit-identical values -> identical routing decisions)
+        self._sharded = (self.route_hasher.sharded(mesh)
+                         if mesh is not None else None)
         self.stats = {"docs": 0, "dup": 0, "eval": 0, "other_shard": 0, "kept": 0}
 
     def _route_hashes(self, docs, backend: str | None = None) -> np.ndarray:
@@ -67,6 +71,8 @@ class HashPipeline:
         universality (Thm 3.1) holds for the finished hash, not the raw
         accumulator's low bits.
         """
+        if self._sharded is not None and backend is None:
+            return self._sharded.hash_batch(docs)
         return self.route_hasher.hash_batch(docs, backend=backend)
 
     def _route_one(self, fp: int, h_split: int, h_shard: int) -> str:

@@ -13,7 +13,8 @@ deterministic defaults), streaming (two-level incremental fingerprints),
 sharding (Lemire-reduced shard routing). The legacy `core.ops` free
 functions remain as bit-identical deprecation shims over this package.
 """
-from . import keyring, sharding, streaming  # noqa: F401
+from . import distributed, keyring, sharding, streaming  # noqa: F401
+from .distributed import DeviceShardedBloom, ShardedHasher  # noqa: F401
 from .hasher import Hasher, HashPlan, default_plan  # noqa: F401
 from .sharding import reduce_range, shard_assignment  # noqa: F401
 from .spec import DEFAULT_SEED, FAMILY_NAMES, HashSpec  # noqa: F401

@@ -1,0 +1,360 @@
+"""Multi-device scale-out for the `Hasher` engine: `shard_map` hashing and a
+device-sharded Bloom filter.
+
+The paper's throughput claim (0.2 cycles/byte) only matters at system scale
+if the consumers scale with the kernel. This module partitions the *batch*
+axis of every hashing workload across a mesh 'data' axis (Thorup's framing:
+strongly universal hashing IS the load-balancing primitive, so the work
+splits uniformly by construction):
+
+- `ShardedHasher` -- wraps a `Hasher`; `__call__`/`shard_ids` are pure JAX
+  `shard_map` regions over the data axis (zero host syncs, trace-asserted),
+  and `hash_batch` is the host-convenience twin. Hashing is row-independent,
+  so every sharded result is BIT-IDENTICAL to the single-device `Hasher`
+  after gather -- pinned by tests on a mesh of size 1 (the CPU CI path: same
+  code, degenerate mesh) and on 8 fake devices in a subprocess.
+- `DeviceShardedBloom` -- each device owns a contiguous `1/D` range of the
+  global bit array. Probe indices use the SAME `h mod m` formula as the
+  single-device `BloomFilter`, so membership decisions are bit-identical by
+  construction; `contains`/admission need exactly ONE collective (a psum of
+  per-device miss counts). Item -> home-shard routing for load accounting
+  uses the existing Lemire `(h*n)>>32` reduction from `repro.hash.sharding`.
+
+Collective layout (DESIGN.md section 7): `add` is collective-free (replicated
+probe indices in, local scatter out), `contains` is one psum round-trip, and
+the fused `check_and_add_batch` admission is one launch + one psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..parallel.sharding import data_mesh, mesh_axis_size
+from .hasher import Hasher, _stack_ragged
+from .spec import HashSpec
+
+I32 = jnp.int32
+U8 = jnp.uint8
+
+
+class ShardedHasher:
+    """A `Hasher` scaled out over a mesh data axis.
+
+    The wrapped hasher's key planes are replicated (they are small: K x cap
+    uint32 pairs); the (B, N) token batch is partitioned over `axis`, each
+    device runs the fused K-hash engine on its B/D rows, and results gather
+    back along the same axis. Because every hash is a pure function of its
+    own row, the gathered output is bit-identical to the single-device
+    engine -- sharding changes the schedule, never the values (the same
+    associativity argument as the kernel's block tiling, DESIGN.md section 2).
+
+    A mesh of size 1 (the CPU CI runner) runs the identical `shard_map` code
+    path -- degrade is "the collective is over one device", not a branch.
+    """
+
+    def __init__(self, hasher: Hasher, mesh: Mesh | None = None,
+                 axis: str = "data"):
+        self.hasher = hasher
+        self.mesh = data_mesh() if mesh is None else mesh
+        if axis not in self.mesh.axis_names:
+            raise ValueError(
+                f"mesh has axes {self.mesh.axis_names}, no {axis!r}")
+        self.axis = axis
+        ax = axis
+        # jitted shard_map surfaces, built once: the hasher rides as a pytree
+        # OPERAND (replicated in_spec), so capacity growth / new key material
+        # never invalidates these traces beyond normal shape retraces.
+        self._fn = jax.jit(shard_map(
+            lambda hs, t: hs(t), mesh=self.mesh,
+            in_specs=(P(), P(ax)), out_specs=P(ax), check_rep=False))
+        self._fn_len = jax.jit(shard_map(
+            lambda hs, t, l: hs(t, l), mesh=self.mesh,
+            in_specs=(P(), P(ax), P(ax)), out_specs=P(ax), check_rep=False))
+        self._ids_fns: dict = {}
+
+    @property
+    def n_shards(self) -> int:
+        return mesh_axis_size(self.mesh, self.axis)
+
+    @property
+    def spec(self) -> HashSpec:
+        return self.hasher.spec
+
+    def ensure(self, max_len: int) -> "ShardedHasher":
+        """Grow the wrapped hasher's key planes in place (same Philox
+        streams extend bit-exactly; the shard_map traces are reused because
+        the hasher is an operand, not a closure constant)."""
+        self.hasher = self.hasher.ensure(max_len)
+        return self
+
+    # -- pure JAX surfaces ----------------------------------------------------
+
+    def _pad_rows(self, toks2, lengths):
+        """Pad the flattened (B, N) batch to a multiple of D rows. Padding
+        rows hash to garbage that is sliced off after the gather; their
+        length code is 0 (cheapest row) for variable-length specs."""
+        B = toks2.shape[0]
+        D = self.n_shards
+        Bp = -(-max(B, 1) // D) * D
+        toks_p = jnp.pad(toks2, ((0, Bp - B), (0, 0)))
+        lens_p = None
+        if lengths is not None:
+            lens_p = jnp.pad(
+                jnp.asarray(lengths).reshape((-1,)).astype(I32), (0, Bp - B))
+        return toks_p, lens_p, B
+
+    def __call__(self, tokens, lengths=None):
+        """Sharded twin of `Hasher.__call__`: (..., N) tokens -> (..., K)
+        uint32 or (..., K, 2) limbs, computed B/D rows per device. Pure JAX:
+        composes under jit; zero host syncs (trace-asserted in tests)."""
+        toks = jnp.asarray(tokens)
+        batch_shape, N = toks.shape[:-1], toks.shape[-1]
+        toks_p, lens_p, B = self._pad_rows(toks.reshape((-1, N)), lengths)
+        if lens_p is None:
+            out = self._fn(self.hasher, toks_p)
+        else:
+            out = self._fn_len(self.hasher, toks_p, lens_p)
+        out = out[:B]
+        K = self.spec.n_hashes
+        if self.spec.out_bits == 32:
+            return out.reshape(*batch_shape, K)
+        return out.reshape(*batch_shape, K, 2)
+
+    def shard_ids(self, tokens, n_shards: int, lengths=None):
+        """Sharded twin of `Hasher.shard_ids`: Lemire-reduced routing ids,
+        computed per device over the partitioned batch."""
+        key = (int(n_shards), lengths is not None)
+        fn = self._ids_fns.get(key)
+        if fn is None:
+            ax = self.axis
+            if key[1]:
+                body = lambda hs, t, l: hs.shard_ids(t, n_shards, l)  # noqa: E731
+                specs = (P(), P(ax), P(ax))
+            else:
+                body = lambda hs, t: hs.shard_ids(t, n_shards)  # noqa: E731
+                specs = (P(), P(ax))
+            fn = self._ids_fns[key] = jax.jit(shard_map(
+                body, mesh=self.mesh, in_specs=specs, out_specs=P(ax),
+                check_rep=False))
+        toks = jnp.asarray(tokens)
+        batch_shape, N = toks.shape[:-1], toks.shape[-1]
+        toks_p, lens_p, B = self._pad_rows(toks.reshape((-1, N)), lengths)
+        args = (self.hasher, toks_p) if lens_p is None else (
+            self.hasher, toks_p, lens_p)
+        return fn(*args)[:B].reshape(batch_shape)
+
+    # -- host-convenience batched engine --------------------------------------
+
+    def hash_batch(self, tokens, *, lengths=None,
+                   out_bits: int | None = None) -> np.ndarray:
+        """Sharded twin of `Hasher.hash_batch`: dense or ragged host items
+        in, (B, K) uint32/uint64 numpy out, hashed B/D rows per device
+        through the pure shard_map path. Bit-identical to the single-device
+        `Hasher.hash_batch` (pinned on a size-1 mesh and on 8 fake devices).
+
+        Shapes are bucketed to powers of two (same `pow2_at_least` policy as
+        the single-device engine): ragged streaming workloads hit a BOUNDED
+        set of shard_map traces instead of recompiling per batch shape.
+        Width bucketing needs explicit per-row lengths, so it applies to
+        variable-length specs (every streaming consumer); fixed-length
+        callers hash dense uniform batches where N is naturally stable.
+        """
+        from ..kernels.autotune import pow2_at_least
+
+        spec = self.spec
+        out_bits = spec.out_bits if out_bits is None else out_bits
+        toks, ragged_lens = _stack_ragged(tokens)
+        if lengths is None:
+            if ragged_lens is not None and not spec.variable_length:
+                raise ValueError(
+                    "ragged input requires variable_length=True; pass a "
+                    "dense (B, N) array for fixed-length hashing")
+            lengths = ragged_lens
+        B, N = toks.shape
+        if spec.variable_length:
+            if lengths is None:
+                lengths = np.full(B, N, np.int64)
+            Np = pow2_at_least(max(N, 1))
+            toks_w = np.zeros((B, Np), np.uint32)
+            toks_w[:, :N] = toks
+            toks, N = toks_w, Np
+        # row bucket: pow2 rows per shard, then the D multiple (makes the
+        # pure call's pad-to-multiple-of-D a no-op, so the jit cache is
+        # keyed on bucketed shapes only)
+        D = self.n_shards
+        Bp = D * pow2_at_least(max(1, -(-B // D)))
+        if Bp != B:
+            toks = np.vstack([toks, np.zeros((Bp - B, N), np.uint32)])
+            if lengths is not None:
+                lengths = np.concatenate(
+                    [np.asarray(lengths).reshape(-1),
+                     np.zeros(Bp - B, np.int64)])
+        sharded = self
+        if out_bits == 64 and spec.out_bits == 32:
+            # widen the OUTPUT only: same key streams, full accumulators.
+            # The widened twin is cached -- its jitted shard_map surfaces
+            # must persist across calls like the primary ones.
+            if self.hasher._mkb is None:
+                raise ValueError("64-bit output needs the Hasher's key buffer")
+            w = getattr(self, "_wide64", None)
+            if w is None:
+                w = self._wide64 = ShardedHasher(
+                    Hasher.from_keys(self.hasher._mkb,
+                                     spec.with_(out_bits=64),
+                                     max_len=N, plan=self.hasher.plan),
+                    self.mesh, self.axis)
+            sharded = w
+        sharded.ensure(N)
+        out = np.asarray(sharded(
+            jnp.asarray(toks),
+            None if lengths is None else jnp.asarray(lengths)))[:B]
+        if out_bits == 64:
+            return (out[..., 0].astype(np.uint64) << np.uint64(32)) | out[..., 1]
+        if spec.out_bits == 64:
+            return out[..., 0]  # finished >>32 hash lives in the hi limb
+        return out
+
+
+class DeviceShardedBloom:
+    """k-probe Bloom filter whose bit array is range-partitioned over the
+    mesh data axis: device d owns global bits [d*m_local, (d+1)*m_local).
+
+    Decision compatibility (pinned in tests): same (m, k, seed) parameters
+    and the same global probe formula `h_j mod m` as the single-device
+    `BloomFilter`, so the SET of global bits lit by any key sequence -- and
+    therefore every membership decision -- is bit-identical; only bit
+    *placement* is distributed. Storage is one device byte per bit (scatter/
+    gather-native on the VPU; the packed-word layout of the host filter is a
+    memory optimization this layer trades for collective-free scatters).
+
+    Collective layout:
+      add_batch             one launch, ZERO collectives (each device scatters
+                            only into its owned range; foreign probes drop)
+      contains_batch        one launch, ONE psum (per-device miss counts)
+      check_and_add_batch   one fused launch, ONE psum (verdicts against the
+                            pre-batch state, then scatter)
+    Item -> home-shard routing (`owner_shards`) uses the existing Lemire
+    `(h*n)>>32` reduction from `repro.hash.sharding` for multi-host admission
+    planning; probe ownership itself is the contiguous range map above.
+
+    KNOWN TRADE-OFF: probe indices are computed on the HOST between the hash
+    launch and the scatter/psum launch (one sync + a (B, k) round-trip per
+    batch). Decision identity pins the probe formula to the single-device
+    `h mod m` on the full 64-bit accumulator with BloomFilter's exact m, and
+    jnp has no 64-bit integers without global x64 (a limb-arithmetic
+    64-mod-m needs its own digit-reduction kernel) -- fusing the reduction
+    in-graph is a ROADMAP item, not a quick win.
+    """
+
+    def __init__(self, n_items: int, fp_rate: float = 1e-3, seed: int = 0xB100,
+                 mesh: Mesh | None = None, axis: str = "data"):
+        import math
+
+        # same sizing as data.dedup.BloomFilter -- decision identity needs
+        # identical (m, k) for identical inputs
+        self.m = max(64, int(-n_items * math.log(fp_rate) / (math.log(2) ** 2)))
+        self.k = max(1, int(self.m / n_items * math.log(2)))
+        if self.m >= 1 << 31:
+            raise ValueError(f"m={self.m} bits exceeds the int32 probe-index "
+                             "domain; shard the filter by keyspace first")
+        self.sharded = ShardedHasher(Hasher.from_spec(HashSpec(
+            family="multilinear", n_hashes=self.k, out_bits=64,
+            variable_length=True, seed=seed)), mesh, axis)
+        self.mesh, self.axis = self.sharded.mesh, self.sharded.axis
+        D = self.sharded.n_shards
+        self.m_local = -(-self.m // D)
+        m_pad = self.m_local * D
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        self.bits = jax.device_put(jnp.zeros(m_pad, U8), sharding)
+
+        m_local, ax = self.m_local, self.axis
+
+        def _local(g):
+            """Global probe index -> (local index, owned mask) with foreign
+            probes clamped to the drop slot m_local (never wrapped: negative
+            scatter indices would alias the tail of the local range)."""
+            loc = g - jax.lax.axis_index(ax) * m_local
+            owned = (loc >= 0) & (loc < m_local)
+            return jnp.where(owned, loc, m_local), owned
+
+        def _miss(bits, g):
+            loc, owned = _local(g)
+            probe = jnp.where(owned, bits[jnp.clip(loc, 0, m_local - 1)],
+                              U8(1))
+            return jax.lax.psum(
+                jnp.sum((probe == 0).astype(I32), axis=1), ax)
+
+        def add_body(bits, g):
+            loc, _ = _local(g)
+            return bits.at[loc.ravel()].set(U8(1), mode="drop")
+
+        def contains_body(bits, g):
+            return _miss(bits, g) == 0
+
+        def admit_body(bits, g):
+            present = _miss(bits, g) == 0
+            loc, _ = _local(g)
+            return bits.at[loc.ravel()].set(U8(1), mode="drop"), ~present
+
+        sm = lambda body, out_specs: jax.jit(shard_map(  # noqa: E731
+            body, mesh=self.mesh, in_specs=(P(self.axis), P()),
+            out_specs=out_specs, check_rep=False))
+        self._add = sm(add_body, P(self.axis))
+        self._contains = sm(contains_body, P())
+        self._admit = sm(admit_body, (P(self.axis), P()))
+
+    @property
+    def n_shards(self) -> int:
+        return self.sharded.n_shards
+
+    def _probes(self, items) -> np.ndarray:
+        """(B, k) int32 GLOBAL probe indices: the full 64-bit accumulators
+        mod m, exactly the single-device `BloomFilter` formula, hashed B/D
+        rows per device by the sharded engine."""
+        h = self.sharded.hash_batch(items)  # (B, k) uint64
+        return (h % np.uint64(self.m)).astype(np.int32)
+
+    def owner_shards(self, items) -> np.ndarray:
+        """(B,) home shard per item via the Lemire multiply-shift reduction
+        on the finished 32-bit hash (load-accounting/routing for multi-host
+        admission; probe ownership is the contiguous range map)."""
+        from .sharding import reduce_range
+
+        h32 = (self.sharded.hash_batch(items)[:, 0]
+               >> np.uint64(32)).astype(np.uint32)
+        return reduce_range(h32, self.n_shards)
+
+    def add_batch(self, items) -> None:
+        """Admit a batch: one sharded hash launch + one collective-free
+        scatter launch (each device writes only its owned bit range)."""
+        if len(items) == 0:
+            return
+        self.bits = self._add(self.bits, jnp.asarray(self._probes(items)))
+
+    def contains_batch(self, items) -> np.ndarray:
+        """(B,) bool membership -- one launch, one psum round-trip."""
+        if len(items) == 0:
+            return np.zeros(0, bool)
+        return np.asarray(
+            self._contains(self.bits, jnp.asarray(self._probes(items))))
+
+    def check_and_add_batch(self, items) -> np.ndarray:
+        """(B,) admission mask in ONE fused launch + ONE psum: True where
+        the item was not already present. Verdicts are evaluated against the
+        pre-batch state (duplicates WITHIN a batch all admit -- the batched
+        round-trip contract; stream items through `contains`+`add` per
+        sub-batch when arrival-order dedup inside a batch matters)."""
+        if len(items) == 0:
+            return np.zeros(0, bool)
+        self.bits, admitted = self._admit(
+            self.bits, jnp.asarray(self._probes(items)))
+        return np.asarray(admitted)
+
+    def add(self, item) -> None:
+        self.add_batch([np.atleast_1d(item)])
+
+    def __contains__(self, item) -> bool:
+        return bool(self.contains_batch([np.atleast_1d(item)])[0])

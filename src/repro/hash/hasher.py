@@ -364,6 +364,15 @@ class Hasher:
         hi, lo = np.asarray(self.digest(state))
         return (int(hi) << 32) | int(lo)
 
+    def sharded(self, mesh=None, axis: str = "data"):
+        """Scale this Hasher out over a mesh data axis: a `ShardedHasher`
+        (repro.hash.distributed) partitioning every batch over `axis`.
+        Results are bit-identical to this Hasher; a 1-device mesh (the CPU
+        CI runner) runs the same shard_map code path degenerately."""
+        from .distributed import ShardedHasher
+
+        return ShardedHasher(self, mesh, axis)
+
     # -- misc ----------------------------------------------------------------
 
     def __repr__(self):

@@ -14,15 +14,12 @@ Memory notes (these drive the roofline):
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..parallel.sharding import constraint
-from . import layers
 
 NEG_INF = -1e30
 

@@ -7,7 +7,6 @@ learned positions. Built from the same sublayer primitives as transformer.py.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

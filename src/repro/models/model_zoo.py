@@ -5,7 +5,7 @@ go through this; `--arch <id>` resolves configs.get_config and then build().
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -21,13 +21,11 @@ what makes gemma3/jamba long_500k feasible (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..parallel.sharding import constraint
 from . import attention as attn

@@ -1,3 +1,4 @@
 """Distribution substrate: sharding rules, collectives, pipeline."""
 from . import sharding  # noqa: F401
-from .sharding import batch_sharding, constraint, param_shardings, param_specs, use_mesh  # noqa: F401
+from .sharding import (batch_sharding, constraint, data_mesh, mesh_axis_size,  # noqa: F401
+                       param_shardings, param_specs, use_mesh)

@@ -18,14 +18,12 @@ parser).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from . import sharding as sh
 
 
 def quantize_int8(x, rng_bits):

@@ -257,3 +257,20 @@ def batch_sharding(mesh: Mesh, ndim: int):
     """Input batch: dim 0 over ('pod','data'), rest replicated."""
     names = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
     return NamedSharding(mesh, P(names, *([None] * (ndim - 1))))
+
+
+def data_mesh(max_devices: int | None = None) -> Mesh:
+    """1-D ('data',) mesh over the live device set -- the scale-out substrate
+    for `repro.hash.distributed` (FUNCTION, not constant: importing never
+    touches device state). On a single-device host this is a mesh of size 1
+    and every shard_map over it runs the plain single-device code path."""
+    n = len(jax.devices())
+    if max_devices is not None:
+        n = min(n, max_devices)
+    return jax.make_mesh((n,), ("data",))
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    """Extent of `name` in `mesh` (1 if absent -- degenerate degrade)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get(name, 1))

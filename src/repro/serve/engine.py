@@ -12,7 +12,6 @@ assigns requests to replicas by... a Multilinear hash of the session id.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,7 @@ class Request:
 
 class ServeEngine:
     def __init__(self, api, params, *, n_slots: int = 4, max_seq: int = 256,
-                 greedy: bool = True):
+                 greedy: bool = True, mesh=None):
         self.api = api
         self.params = params
         self.B = n_slots
@@ -47,13 +46,20 @@ class ServeEngine:
         self._prefix_hasher = Hasher.from_spec(HashSpec(
             family="multilinear", n_hashes=1, out_bits=64,
             variable_length=True, seed=_PREFIX_KEY_SEED))
+        # pending prompts are fingerprinted across the mesh data axis (B/D
+        # rows per device) and ASYNCHRONOUSLY: the launch is dispatched at
+        # submit time, materialized only when _assign first needs a key, so
+        # hashing overlaps prefill compute. mesh=None uses the live device
+        # set (a 1-device mesh on CPU -- same code path).
+        self._prefix_sharded = self._prefix_hasher.sharded(mesh)
+        self._pending_keys = None  # (req_ids, in-flight device array)
         self._req_key_cache: dict[int, int] = {}
         self.slots: list[Request | None] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int64)
         self.caches = api.init_caches(n_slots, max_seq)
         self.stats = {"prefix_hits": 0, "prefills": 0, "ticks": 0}
 
-    # -- prefix cache (paper fingerprints, DESIGN.md §3) ---------------------
+    # -- prefix cache (paper fingerprints, DESIGN.md §3/§7) ------------------
 
     def _prompt_key(self, prompt: np.ndarray) -> int:
         """64-bit variable-length fingerprint of one prompt (host path --
@@ -62,20 +68,45 @@ class ServeEngine:
             [prompt.astype(np.uint32)], backend="host")[0, 0])
 
     def _precompute_prompt_keys(self, requests: "list[Request]") -> None:
-        """Fingerprint every pending prompt in ONE fused hash launch; keys
-        land in a per-request cache consulted by _assign at admission."""
+        """Fingerprint every pending prompt in ONE device-sharded hash
+        launch, dispatched asynchronously (jax async dispatch: no host sync
+        here; `_drain_prompt_keys` materializes on first use). Shapes are
+        pow2-bucketed so varying request counts / prompt lengths reuse a
+        bounded set of traces instead of compiling per submit_all."""
         if not requests:
             return
-        fps = self._prefix_hasher.hash_batch(
-            [r.prompt.astype(np.uint32) for r in requests])[:, 0]
-        for r, fp in zip(requests, fps):
-            self._req_key_cache[r.req_id] = int(fp)
+        from ..kernels.autotune import pow2_at_least
+
+        prompts = [r.prompt.astype(np.uint32) for r in requests]
+        n_pad = pow2_at_least(max((len(p) for p in prompts), default=1) or 1)
+        b_pad = pow2_at_least(len(prompts))
+        toks = np.zeros((b_pad, n_pad), np.uint32)
+        lens = np.zeros(b_pad, np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+            lens[i] = len(p)
+        self._prefix_sharded.ensure(n_pad)
+        limbs = self._prefix_sharded(jnp.asarray(toks), jnp.asarray(lens))
+        self._pending_keys = ([r.req_id for r in requests], limbs)
+
+    def _drain_prompt_keys(self) -> None:
+        """Materialize the in-flight fingerprint launch (one sync for the
+        whole pending batch) into the per-request key cache."""
+        if self._pending_keys is None:
+            return
+        req_ids, limbs = self._pending_keys
+        self._pending_keys = None
+        arr = np.asarray(limbs)[: len(req_ids)]  # (B, 1, 2) uint32 (hi, lo)
+        fps = (arr[:, 0, 0].astype(np.uint64) << np.uint64(32)) | arr[:, 0, 1]
+        for rid, fp in zip(req_ids, fps):
+            self._req_key_cache[rid] = int(fp)
 
     # -- slot management -----------------------------------------------------
 
     def _assign(self, req: Request, slot: int):
         """Prefill a single request into slot `slot` of the batched cache."""
         T = len(req.prompt)
+        self._drain_prompt_keys()
         key = self._req_key_cache.pop(req.req_id, None)
         if key is None:
             key = self._prompt_key(req.prompt)

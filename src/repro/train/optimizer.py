@@ -16,7 +16,6 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..parallel.sharding import tree_paths
 
 
 def _is_trainable(path: str) -> bool:

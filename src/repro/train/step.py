@@ -6,8 +6,6 @@ full DP/FSDP/TP/EP/SP story (DESIGN.md §5).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

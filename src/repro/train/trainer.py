@@ -8,9 +8,8 @@ host" (coordinator re-forms the mesh via launch/elastic.py)."""
 from __future__ import annotations
 
 import dataclasses
-import signal
 import time
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import jax
 import numpy as np

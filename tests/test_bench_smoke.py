@@ -6,6 +6,7 @@ import os
 import pytest
 
 
+@pytest.mark.slow  # CI runs the same harness in its dedicated bench-smoke job
 def test_bench_harness_end_to_end(tmp_path, capsys, monkeypatch):
     from benchmarks import common, run
 

@@ -1,6 +1,5 @@
 """Baseline hash functions (Rabin-Karp, SAX, NH, FNV, Zobrist)."""
 import numpy as np
-import pytest
 
 from repro.core import baselines, keys as keymod
 

@@ -1,6 +1,5 @@
 """Hash-powered data pipeline: dedup, split stability, packing, Bloom."""
 import numpy as np
-import pytest
 
 from repro.data import BloomFilter, ExactDedup, HashPipeline, PipelineConfig
 from repro.data.synthetic import corpus

@@ -241,6 +241,30 @@ def test_keyring_lru_identity_and_bound():
     keyring.clear()
 
 
+def test_keyring_hasher_cache_bound_and_lru_order():
+    """The HASHER cache (not just the buffer cache) stays within
+    _MAX_ENTRIES under churn, evicts least-recently-USED first, and a
+    capacity upgrade replaces the entry in place (no unbounded widening)."""
+    keyring.clear()
+    hot = HashSpec(seed=0x900)
+    keyring.hasher_for(hot)
+    for i in range(2 * keyring._MAX_ENTRIES):
+        keyring.hasher_for(HashSpec(seed=0x3000 + i))
+        keyring.hasher_for(hot)  # re-touch: must stay resident
+        assert len(keyring._HASHERS) <= keyring._MAX_ENTRIES
+    assert (hot, None) in keyring._HASHERS
+    # the oldest untouched spec was evicted
+    assert all(k[0].seed != 0x3000 for k in keyring._HASHERS)
+    # widening replaces the entry (same key, larger capacity), not a dup
+    n_before = len(keyring._HASHERS)
+    small = keyring.hasher_for(hot)
+    wide = keyring.hasher_for(hot, max_len=4 * small.capacity)
+    assert wide.capacity > small.capacity
+    assert len(keyring._HASHERS) == n_before
+    assert keyring.hasher_for(hot) is wide
+    keyring.clear()
+
+
 def test_keyring_values_survive_eviction():
     keyring.clear()
     toks = _toks(2, 4)

@@ -6,7 +6,6 @@ import pytest
 
 from repro.core import gf as gf_core, hostref, keys as keymod
 from repro.kernels import ops as kops
-from repro.kernels import ref as kref
 
 RNG = np.random.Generator(np.random.Philox(key=np.uint64(2718)))
 KB = keymod.KeyBuffer(seed=0xFEED)

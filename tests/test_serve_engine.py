@@ -44,6 +44,7 @@ def test_prefix_cache_hits(engine):
     assert reqs[0].out_tokens == reqs[1].out_tokens
 
 
+@pytest.mark.slow  # model decode math, not engine/hash behaviour: full lane
 def test_greedy_matches_manual_decode(engine):
     """Engine output == manual prefill+decode loop for a single request."""
     api, params = engine
