@@ -7,14 +7,21 @@ ratios are size artifacts, not regressions. The default therefore re-runs
 the engine subset at FULL size (a couple of minutes). Metric per row:
 `cycles_per_byte_equiv` when both sides have it, else `us_per_call`.
 
-Rows above the tolerance band are flagged; the report is NON-BLOCKING by
-default (CI-runner timing noise, and cross-machine baselines) -- pass
---strict to turn flags into a nonzero exit for perf-focused pipelines.
+Two severity tiers:
+
+- the full report stays NON-BLOCKING at --tolerance (CI-runner timing
+  noise, cross-machine baselines); pass --strict to turn any flag into a
+  nonzero exit;
+- --max-regress R is the BLOCKING PR gate for the pinned hot-path rows
+  (--gate name prefixes, default: the engine fast paths): any gated row
+  slower than R x baseline exits 1 unconditionally. BENCH_kernels.json +
+  BENCH_distributed.json form a real measured trajectory, so the hot rows
+  gate merges instead of merely informing.
 
 Usage:
   python -m benchmarks.check_regression                   # runs subset itself
   python -m benchmarks.check_regression --fresh f.json    # compare saved run
-  python -m benchmarks.check_regression --tolerance 2.0 --strict
+  python -m benchmarks.check_regression --max-regress 1.25   # blocking gate
 """
 from __future__ import annotations
 
@@ -24,6 +31,15 @@ import sys
 
 # modules with throughput rows that exist at both --fast and full sizes
 _SMOKE_MODULES = "kernels,multihash,hasher,distributed"
+
+# hot-path rows gated by --max-regress: the COMPUTE-BOUND jit engine fast
+# paths whose regression would invalidate the paper-claim trajectory. The
+# host-sync/collective-bound rows (distributed/*) and the interpret
+# Python-exec rows swing multi-x on shared-core CPU runners and stay in
+# the non-blocking report. Prefix match.
+_GATE_PREFIXES = ("multihash/kscale/",
+                  "multihash/bloom4096x9probe/fused-jnp",
+                  "hasher_overhead/")
 
 
 def load_rows(path: str) -> tuple[dict, bool]:
@@ -61,7 +77,13 @@ def main(argv=None) -> int:
                          "(default 2.5: CPU-runner noise band)")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 when any row is flagged (default: report "
-                         "only -- the CI step is non-blocking)")
+                         "only for non-gated rows)")
+    ap.add_argument("--max-regress", type=float, default=None,
+                    help="BLOCKING gate: exit 1 when any hot-path row (see "
+                         "--gate) is slower than this ratio x baseline")
+    ap.add_argument("--gate", default=",".join(_GATE_PREFIXES),
+                    help="comma-separated row-name prefixes the --max-regress "
+                         "gate applies to")
     args = ap.parse_args(argv)
 
     base, base_fast = load_rows(args.baseline)
@@ -76,23 +98,48 @@ def main(argv=None) -> int:
             bench_run.main(["--only", _SMOKE_MODULES, "--json", tmp.name])
             fresh, fresh_fast = load_rows(tmp.name)
 
+    gating = args.max_regress is not None
     if base_fast != fresh_fast:
         print(f"# baseline fast={base_fast} vs fresh fast={fresh_fast}: "
               "sizes differ, ratios would be size artifacts -- not comparing")
-        return 0
+        # a BLOCKING gate must fail closed: "could not compare" is a gate
+        # failure, not a pass (e.g. a fast=true baseline would otherwise
+        # silently disarm the PR gate forever)
+        return 1 if gating else 0
     rows = list(compare(base, fresh, args.tolerance))
     if not rows:
-        print("# no comparable rows between baseline and fresh run")
-        return 0
+        print("# no comparable rows between baseline and fresh run"
+              + (" -- BLOCKING (gate has nothing to check)" if gating else ""))
+        return 1 if gating else 0
+    gate_prefixes = tuple(p for p in args.gate.split(",") if p)
+    gated = lambda name: gating and name.startswith(gate_prefixes)  # noqa: E731
+    if gating:
+        # fail closed PER PREFIX: a partial bench-row rename must not
+        # silently narrow the gate's coverage
+        uncovered = [p for p in gate_prefixes
+                     if not any(r[0].startswith(p) for r in rows)]
+        if uncovered:
+            print(f"# BLOCKING: gate prefix(es) {uncovered} match no "
+                  "comparable row -- part of the hot-path gate would check "
+                  "nothing (renamed bench rows? stale baseline?)")
+            return 1
     flagged = [r for r in rows if r[5]]
+    blocked = [r for r in rows if gated(r[0]) and r[4] > args.max_regress]
     width = max(len(r[0]) for r in rows)
     print(f"# regression report: baseline={args.baseline} "
-          f"tolerance={args.tolerance}x ({len(rows)} comparable rows)")
+          f"tolerance={args.tolerance}x"
+          + (f" gate={args.max_regress}x" if args.max_regress else "")
+          + f" ({len(rows)} comparable rows)")
     print(f"{'name':<{width}}  metric    baseline      fresh      ratio")
     for name, metric, bv, fv, ratio, bad in rows:
-        mark = "  << REGRESSION" if bad else ""
+        mark = ("  << GATE" if gated(name) and ratio > args.max_regress
+                else "  << REGRESSION" if bad else "")
         print(f"{name:<{width}}  {metric:<8}{bv:>10.3f} {fv:>10.3f} "
               f"{ratio:>9.2f}x{mark}")
+    if blocked:
+        print(f"# BLOCKING: {len(blocked)} hot-path row(s) above the "
+              f"{args.max_regress}x gate")
+        return 1
     if flagged:
         print(f"# {len(flagged)} row(s) above the {args.tolerance}x band")
         return 1 if args.strict else 0

@@ -82,6 +82,22 @@ def _bench_meshes(meshes: "list[tuple[str, object]]") -> None:
             "host packed-word filter" if mesh is None else
             f"range-partitioned bits, one psum ({tag})", n_bytes=n_bytes)
 
+    # fused admission, before/after the in-graph mod: 'hostmod' replays the
+    # legacy per-batch host round-trip (sync + (B, k) transfer to compute
+    # `h % m` in numpy), 'ingraph' the limbs.mod_u64 Barrett reduction +
+    # probe all_gather inside the launch (zero host syncs)
+    for tag, mesh in meshes:
+        if mesh is None:
+            continue
+        for mode in ("hostmod", "ingraph"):
+            dsb = DeviceShardedBloom(n_items=B, fp_rate=1e-3, mesh=mesh,
+                                     in_graph_mod=(mode == "ingraph"))
+            fn = lambda dsb=dsb: dsb.check_and_add_batch(toks)  # noqa: E731
+            t = timeit(fn, repeats=reps, inner=1, warmup=1)
+            row(f"distributed/bloom_admit/B{B}/{mode}/{tag}", t * 1e6,
+                "legacy host-side h%m round-trip" if mode == "hostmod" else
+                "in-graph Barrett mod + probe all_gather", n_bytes=n_bytes)
+
 
 def run() -> None:
     """benchmarks.run module hook: live device set (D=1 on the CI runner)."""

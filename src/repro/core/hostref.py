@@ -44,6 +44,45 @@ def multilinear_np_u64(tokens: np.ndarray, keys_u64: np.ndarray) -> np.ndarray:
         return keys_u64[0] + (k * s).sum(axis=-1, dtype=U64)
 
 
+def mod_u64_np(h: np.ndarray, m: int) -> np.ndarray:
+    """(...,) uint64 values mod 32-bit `m` -> (...,) uint32 residues.
+
+    Bit-exact host twin of `limbs.mod_u64` (same Barrett digit reduction,
+    M = floor(2^96/m) + 1, power-of-two mask fast path), structured
+    limb-for-limb so the device algorithm has an independent numpy oracle;
+    property tests additionally pin both against numpy's own `%`.
+    """
+    h = np.asarray(h, U64)
+    m = int(m)
+    if not 1 <= m < 1 << 32:
+        raise ValueError(f"modulus {m} outside the 32-bit domain [1, 2^32)")
+    if m & (m - 1) == 0:
+        return (h & U64(m - 1)).astype(np.uint32)
+    mu = (1 << 96) // m + 1
+    mu0, mu1, mu2 = (U64(mu & 0xFFFFFFFF), U64((mu >> 32) & 0xFFFFFFFF),
+                     U64(mu >> 64))
+    mask = U64(0xFFFFFFFF)
+    hi, lo = h >> _32, h & mask
+    with np.errstate(over="ignore"):
+        # L = (M * x) mod 2^96 as three 32-bit limbs (partial products kept
+        # in uint64, each < 2^64; limb 2 wraps mod 2^32 == mod 2^96 total)
+        p0 = mu0 * lo
+        p1 = mu0 * hi
+        p2 = mu1 * lo
+        l0 = p0 & mask
+        s1 = (p0 >> _32) + (p1 & mask) + (p2 & mask)
+        l1 = s1 & mask
+        l2 = ((s1 >> _32) + (p1 >> _32) + (p2 >> _32)
+              + ((mu1 * hi) & mask) + ((mu2 * lo) & mask)) & mask
+        # r = floor(m * L / 2^96) = limb 3 of the (m * L) product
+        q0 = U64(m) * l0
+        q1 = U64(m) * l1
+        q2 = U64(m) * l2
+        t1 = (q0 >> _32) + (q1 & mask)
+        t2 = (t1 >> _32) + (q1 >> _32) + (q2 & mask)
+        return ((t2 >> _32) + (q2 >> _32)).astype(np.uint32)
+
+
 def encode_lengths(lengths, n: int, variable_length: bool, batch: int) -> np.ndarray:
     """(batch,) int32 per-row length codes consumed by every multi-hash backend.
 

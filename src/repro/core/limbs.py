@@ -16,6 +16,8 @@ semantics that the paper's implementations rely on.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -132,6 +134,113 @@ def u64_to_numpy(a):
     hi = np.asarray(a[0], dtype=np.uint64)
     lo = np.asarray(a[1], dtype=np.uint64)
     return (hi << np.uint64(32)) | lo
+
+
+# ---------------------------------------------------------------------------
+# 64-mod-m digit reduction (DESIGN.md §2): h mod m for arbitrary 32-bit m,
+# entirely in 32-bit ops, so Bloom probe indices never leave the device.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModPlan:
+    """Frozen per-modulus aux for `mod_u64`/`mw_mod`.
+
+    Carries the Barrett reciprocal M = floor(2^96 / m) + 1 as three uint32
+    limbs (little-endian). All fields are python ints: the plan is hashable
+    (jit static argument / kernel closure) and the limbs enter traced code
+    as numpy-scalar literals, never captured array constants.
+
+    Why 96 bits: for x < 2^F and m < 2^L the reciprocal at N = F + L bits
+    makes the floor-division estimate EXACT (see `mod_u64`); with F = 64,
+    L = 32 that is N = 96, so M fits three limbs for every non-power-of-two
+    m >= 3 (M <= 2^96/3 + 1 < 2^95). Powers of two (including m = 1) take
+    the mask fast path and never consult M.
+    """
+
+    m: int
+    is_pow2: bool
+    mu0: int
+    mu1: int
+    mu2: int
+
+    @classmethod
+    def for_modulus(cls, m: int) -> "ModPlan":
+        m = int(m)
+        if not 1 <= m < 1 << 32:
+            raise ValueError(f"modulus {m} outside the 32-bit domain [1, 2^32)")
+        if m & (m - 1) == 0:
+            return cls(m=m, is_pow2=True, mu0=0, mu1=0, mu2=0)
+        mu = (1 << 96) // m + 1
+        return cls(m=m, is_pow2=False, mu0=mu & 0xFFFFFFFF,
+                   mu1=(mu >> 32) & 0xFFFFFFFF, mu2=mu >> 64)
+
+
+def mod_u64(a, plan: ModPlan):
+    """(hi, lo) uint32 64-bit value mod `plan.m` -> uint32 residue (< m).
+
+    Power-of-two m: ``lo & (m-1)`` (m divides 2^32, the hi limb vanishes).
+
+    Otherwise the Lemire/Barrett direct-remainder form on 16-bit digits
+    (every multiply below is `mul32_full`, i.e. four native 16-bit-digit
+    multiplies): with M = floor(2^96/m) + 1,
+
+        L = (M * x) mod 2^96          # fractional part of x/m, 96-bit fixed
+        r = floor(m * L / 2^96)       # scale the fraction back by m
+
+    EXACTNESS (the correction-step bound, DESIGN.md §2): write
+    2^96 = k*m + rho (0 < rho < m, m not a power of two) so M = k + 1 and
+    M*x = (2^96*x + b*x)/m with b = m - rho in [1, m-1]. Then
+    L/2^96 = (x mod m)/m + b*x/(m*2^96), and the error term obeys
+    b*x < m * 2^64 <= 2^96, hence m*L/2^96 < (x mod m) + 1 and the floor
+    IS the remainder -- the classic Barrett q-estimate correction step is
+    provably never needed at this reciprocal width.
+    """
+    hi, lo = _u32(a[0]), _u32(a[1])
+    if plan.is_pow2:
+        return lo & np.uint32(plan.m - 1)
+    m32 = np.uint32(plan.m)
+    mu0 = np.uint32(plan.mu0)
+    mu1 = np.uint32(plan.mu1)
+    mu2 = np.uint32(plan.mu2)
+    # L = (M * x) mod 2^96, x = hi*2^32 + lo: 3 full + 2 low multiplies.
+    # Contributions at limb 2 wrap mod 2^32 (== mod 2^96 overall); the
+    # (mu2, hi) product lands entirely at limb 3 and is dropped.
+    p0_hi, p0_lo = mul32_full(mu0, lo)
+    p1_hi, p1_lo = mul32_full(mu0, hi)
+    p2_hi, p2_lo = mul32_full(mu1, lo)
+    s1 = p0_hi + p1_lo
+    c1 = (s1 < p1_lo).astype(U32)
+    l1 = s1 + p2_lo
+    c2 = (l1 < p2_lo).astype(U32)
+    l2 = p1_hi + p2_hi + mu1 * hi + mu2 * lo + c1 + c2
+    # r = floor(m * L / 2^96) = limb 3 of the (m * L) product: 3 full
+    # multiplies, carries propagated limb by limb.
+    q0_hi, _ = mul32_full(m32, p0_lo)
+    q1_hi, q1_lo = mul32_full(m32, l1)
+    q2_hi, q2_lo = mul32_full(m32, l2)
+    t1 = q0_hi + q1_lo
+    c1 = (t1 < q1_lo).astype(U32)
+    t2 = q1_hi + q2_lo
+    ca = (t2 < q2_lo).astype(U32)
+    t2c = t2 + c1
+    cb = (t2c < c1).astype(U32)
+    return q2_hi + ca + cb
+
+
+def mw_mod(a, plan: ModPlan):
+    """u32xN little-endian multiword mod `plan.m` -> uint32 residue (< m).
+
+    Horner over 32-bit limbs from the most significant down: the running
+    residue r < m makes every step value r*2^32 + limb < m*2^32 <= 2^64,
+    i.e. exactly one `mod_u64` per limb. (Power-of-two m degenerates to
+    ``a[0] & (m-1)`` through the same loop: each step discards r because
+    m divides 2^32.)
+    """
+    r = jnp.zeros_like(_u32(a[-1]))
+    for limb in reversed(a):
+        r = mod_u64((r, limb), plan)
+    return r
 
 
 # ---------------------------------------------------------------------------

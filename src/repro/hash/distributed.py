@@ -15,14 +15,16 @@ splits uniformly by construction):
   code, degenerate mesh) and on 8 fake devices in a subprocess.
 - `DeviceShardedBloom` -- each device owns a contiguous `1/D` range of the
   global bit array. Probe indices use the SAME `h mod m` formula as the
-  single-device `BloomFilter`, so membership decisions are bit-identical by
-  construction; `contains`/admission need exactly ONE collective (a psum of
-  per-device miss counts). Item -> home-shard routing for load accounting
-  uses the existing Lemire `(h*n)>>32` reduction from `repro.hash.sharding`.
+  single-device `BloomFilter` -- computed IN-GRAPH by the `limbs.mod_u64`
+  Barrett digit reduction on each device's own accumulator limbs -- so
+  membership decisions are bit-identical by construction and admission
+  never round-trips through the host. Item -> home-shard routing for load
+  accounting uses the Lemire `(h*n)>>32` reduction from
+  `repro.hash.sharding`.
 
-Collective layout (DESIGN.md section 7): `add` is collective-free (replicated
-probe indices in, local scatter out), `contains` is one psum round-trip, and
-the fused `check_and_add_batch` admission is one launch + one psum.
+Collective layout (DESIGN.md section 7): `add` is one fused launch with one
+probe all_gather (zero psums, ZERO host syncs), `contains` and the fused
+`check_and_add_batch` admission are one launch + one all_gather + one psum.
 """
 from __future__ import annotations
 
@@ -32,12 +34,24 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..core import limbs
 from ..parallel.sharding import data_mesh, mesh_axis_size
 from .hasher import Hasher, _stack_ragged
 from .spec import HashSpec
 
 I32 = jnp.int32
 U8 = jnp.uint8
+
+
+def _bucket_shape(B: int, N: int, D: int) -> "tuple[int, int]":
+    """pow2 bounded-trace bucket for sharded launches: (Bp, Np) with the
+    width rounded to the next power of two and rows to D * pow2(ceil(B/D))
+    -- the D multiple makes the pure call's pad-to-multiple-of-D a no-op,
+    so jit caches key on bucketed shapes only. Single source of the policy
+    for `ShardedHasher.hash_batch` and `DeviceShardedBloom._stage`."""
+    from ..kernels.autotune import pow2_at_least
+
+    return D * pow2_at_least(max(1, -(-B // D))), pow2_at_least(max(N, 1))
 
 
 class ShardedHasher:
@@ -162,8 +176,6 @@ class ShardedHasher:
         variable-length specs (every streaming consumer); fixed-length
         callers hash dense uniform batches where N is naturally stable.
         """
-        from ..kernels.autotune import pow2_at_least
-
         spec = self.spec
         out_bits = spec.out_bits if out_bits is None else out_bits
         toks, ragged_lens = _stack_ragged(tokens)
@@ -174,18 +186,13 @@ class ShardedHasher:
                     "dense (B, N) array for fixed-length hashing")
             lengths = ragged_lens
         B, N = toks.shape
+        Bp, Np = _bucket_shape(B, N, self.n_shards)
         if spec.variable_length:
             if lengths is None:
                 lengths = np.full(B, N, np.int64)
-            Np = pow2_at_least(max(N, 1))
             toks_w = np.zeros((B, Np), np.uint32)
             toks_w[:, :N] = toks
             toks, N = toks_w, Np
-        # row bucket: pow2 rows per shard, then the D multiple (makes the
-        # pure call's pad-to-multiple-of-D a no-op, so the jit cache is
-        # keyed on bucketed shapes only)
-        D = self.n_shards
-        Bp = D * pow2_at_least(max(1, -(-B // D)))
         if Bp != B:
             toks = np.vstack([toks, np.zeros((Bp - B, N), np.uint32)])
             if lengths is not None:
@@ -230,27 +237,36 @@ class DeviceShardedBloom:
     gather-native on the VPU; the packed-word layout of the host filter is a
     memory optimization this layer trades for collective-free scatters).
 
+    Probe indices are computed IN-GRAPH: each device hashes its B/D rows
+    and reduces the (hi, lo) accumulator limbs mod m with the Barrett digit
+    reduction (`limbs.mod_u64`, exact for every 32-bit m -- DESIGN.md §2),
+    then the (B, k) int32 probe indices all_gather along the data axis so
+    every device can test/scatter its owned bit range. The all_gather is
+    the same (B, k) transfer the previous implementation bounced through
+    the host (sync + device->host->device per batch), now a device-to-device
+    collective inside the launch: admission never leaves the device.
+
     Collective layout:
-      add_batch             one launch, ZERO collectives (each device scatters
-                            only into its owned range; foreign probes drop)
-      contains_batch        one launch, ONE psum (per-device miss counts)
-      check_and_add_batch   one fused launch, ONE psum (verdicts against the
-                            pre-batch state, then scatter)
+      add_batch             one launch, one all_gather, ZERO psums and ZERO
+                            host syncs (each device scatters only into its
+                            owned range; foreign probes drop)
+      contains_batch        one launch, one all_gather + ONE psum
+                            (per-device miss counts)
+      check_and_add_batch   one fused launch, one all_gather + ONE psum
+                            (verdicts against the pre-batch state, scatter)
     Item -> home-shard routing (`owner_shards`) uses the existing Lemire
     `(h*n)>>32` reduction from `repro.hash.sharding` for multi-host admission
     planning; probe ownership itself is the contiguous range map above.
 
-    KNOWN TRADE-OFF: probe indices are computed on the HOST between the hash
-    launch and the scatter/psum launch (one sync + a (B, k) round-trip per
-    batch). Decision identity pins the probe formula to the single-device
-    `h mod m` on the full 64-bit accumulator with BloomFilter's exact m, and
-    jnp has no 64-bit integers without global x64 (a limb-arithmetic
-    64-mod-m needs its own digit-reduction kernel) -- fusing the reduction
-    in-graph is a ROADMAP item, not a quick win.
+    `in_graph_mod=False` restores the legacy host round-trip probe path
+    (hash_batch -> numpy `h % m` -> replicated operand) -- kept as the
+    decision-identity A/B reference and the benchmark baseline; both paths
+    are bit-identical to the single-device `BloomFilter` by construction.
     """
 
     def __init__(self, n_items: int, fp_rate: float = 1e-3, seed: int = 0xB100,
-                 mesh: Mesh | None = None, axis: str = "data"):
+                 mesh: Mesh | None = None, axis: str = "data",
+                 in_graph_mod: bool = True):
         import math
 
         # same sizing as data.dedup.BloomFilter -- decision identity needs
@@ -264,13 +280,15 @@ class DeviceShardedBloom:
             family="multilinear", n_hashes=self.k, out_bits=64,
             variable_length=True, seed=seed)), mesh, axis)
         self.mesh, self.axis = self.sharded.mesh, self.sharded.axis
+        self.in_graph_mod = bool(in_graph_mod)
+        self.plan = limbs.ModPlan.for_modulus(self.m)
         D = self.sharded.n_shards
         self.m_local = -(-self.m // D)
         m_pad = self.m_local * D
         sharding = NamedSharding(self.mesh, P(self.axis))
         self.bits = jax.device_put(jnp.zeros(m_pad, U8), sharding)
 
-        m_local, ax = self.m_local, self.axis
+        m_local, ax, plan = self.m_local, self.axis, self.plan
 
         def _local(g):
             """Global probe index -> (local index, owned mask) with foreign
@@ -287,6 +305,17 @@ class DeviceShardedBloom:
             return jax.lax.psum(
                 jnp.sum((probe == 0).astype(I32), axis=1), ax)
 
+        def _probes_in_graph(hs, toks, lens, valid):
+            """(b_local, N) rows -> (B, k) int32 GLOBAL probe indices: the
+            Barrett digit reduction of each device's own accumulators, then
+            one all_gather of the int32 indices along the data axis (the
+            device-to-device twin of the old host round-trip). Padding rows
+            carry the sentinel -1: owned by no device, so their probes drop
+            from every scatter and read as present (sliced off on host)."""
+            g = hs.probe_indices(toks, plan, lens).astype(I32)
+            g = jnp.where(valid[:, None], g, I32(-1))
+            return jax.lax.all_gather(g, ax, axis=0, tiled=True)
+
         def add_body(bits, g):
             loc, _ = _local(g)
             return bits.at[loc.ravel()].set(U8(1), mode="drop")
@@ -299,23 +328,65 @@ class DeviceShardedBloom:
             loc, _ = _local(g)
             return bits.at[loc.ravel()].set(U8(1), mode="drop"), ~present
 
+        def add_body_dev(bits, hs, toks, lens, valid):
+            return add_body(bits, _probes_in_graph(hs, toks, lens, valid))
+
+        def contains_body_dev(bits, hs, toks, lens, valid):
+            return contains_body(bits, _probes_in_graph(hs, toks, lens, valid))
+
+        def admit_body_dev(bits, hs, toks, lens, valid):
+            return admit_body(bits, _probes_in_graph(hs, toks, lens, valid))
+
         sm = lambda body, out_specs: jax.jit(shard_map(  # noqa: E731
             body, mesh=self.mesh, in_specs=(P(self.axis), P()),
             out_specs=out_specs, check_rep=False))
         self._add = sm(add_body, P(self.axis))
         self._contains = sm(contains_body, P())
         self._admit = sm(admit_body, (P(self.axis), P()))
+        # in-graph surfaces: the hasher rides as a replicated pytree operand
+        # (like ShardedHasher), tokens/lengths/valid partition over the axis
+        smg = lambda body, out_specs: jax.jit(shard_map(  # noqa: E731
+            body, mesh=self.mesh,
+            in_specs=(P(self.axis), P(), P(self.axis), P(self.axis),
+                      P(self.axis)),
+            out_specs=out_specs, check_rep=False))
+        self._add_dev = smg(add_body_dev, P(self.axis))
+        self._contains_dev = smg(contains_body_dev, P())
+        self._admit_dev = smg(admit_body_dev, (P(self.axis), P()))
 
     @property
     def n_shards(self) -> int:
         return self.sharded.n_shards
 
     def _probes(self, items) -> np.ndarray:
-        """(B, k) int32 GLOBAL probe indices: the full 64-bit accumulators
-        mod m, exactly the single-device `BloomFilter` formula, hashed B/D
-        rows per device by the sharded engine."""
+        """LEGACY host round-trip path (`in_graph_mod=False`): (B, k) int32
+        GLOBAL probe indices -- the full 64-bit accumulators mod m, exactly
+        the single-device `BloomFilter` formula, hashed B/D rows per device
+        then reduced with numpy's `%` on host. Bit-identical to the in-graph
+        Barrett reduction; kept as the A/B reference and bench baseline."""
         h = self.sharded.hash_batch(items)  # (B, k) uint64
         return (h % np.uint64(self.m)).astype(np.int32)
+
+    def _stage(self, items):
+        """Stack host items for the in-graph path: (Bp, Np) uint32 tokens,
+        (Bp,) int32 lengths, (Bp,) bool row-valid mask, true batch size B.
+        Shapes bucket via `_bucket_shape` (the same bounded-trace policy as
+        `ShardedHasher.hash_batch`); padding rows are invalid -- their
+        probes become the -1 sentinel in-graph."""
+        toks, lens = _stack_ragged(items)
+        B, N = toks.shape
+        if lens is None:
+            lens = np.full(B, N, np.int64)
+        Bp, Np = _bucket_shape(B, N, self.n_shards)
+        toks_p = np.zeros((Bp, Np), np.uint32)
+        toks_p[:B, :N] = toks
+        lens_p = np.zeros(Bp, np.int32)
+        lens_p[:B] = np.asarray(lens, np.int64)
+        valid = np.zeros(Bp, bool)
+        valid[:B] = True
+        self.sharded.ensure(Np)
+        return (jnp.asarray(toks_p), jnp.asarray(lens_p),
+                jnp.asarray(valid), B)
 
     def owner_shards(self, items) -> np.ndarray:
         """(B,) home shard per item via the Lemire multiply-shift reduction
@@ -328,18 +399,29 @@ class DeviceShardedBloom:
         return reduce_range(h32, self.n_shards)
 
     def add_batch(self, items) -> None:
-        """Admit a batch: one sharded hash launch + one collective-free
-        scatter launch (each device writes only its owned bit range)."""
+        """Admit a batch in ONE fused launch: hash + Barrett mod + probe
+        all_gather + owned-range scatter, all in-graph -- zero psums and
+        ZERO host syncs (the legacy path instead syncs on `_probes`)."""
         if len(items) == 0:
             return
-        self.bits = self._add(self.bits, jnp.asarray(self._probes(items)))
+        if not self.in_graph_mod:
+            self.bits = self._add(self.bits, jnp.asarray(self._probes(items)))
+            return
+        toks, lens, valid, _ = self._stage(items)
+        self.bits = self._add_dev(
+            self.bits, self.sharded.hasher, toks, lens, valid)
 
     def contains_batch(self, items) -> np.ndarray:
-        """(B,) bool membership -- one launch, one psum round-trip."""
+        """(B,) bool membership -- one fused launch, one all_gather + one
+        psum; the only host transfer is the final (B,) verdict read."""
         if len(items) == 0:
             return np.zeros(0, bool)
-        return np.asarray(
-            self._contains(self.bits, jnp.asarray(self._probes(items))))
+        if not self.in_graph_mod:
+            return np.asarray(
+                self._contains(self.bits, jnp.asarray(self._probes(items))))
+        toks, lens, valid, B = self._stage(items)
+        return np.asarray(self._contains_dev(
+            self.bits, self.sharded.hasher, toks, lens, valid))[:B]
 
     def check_and_add_batch(self, items) -> np.ndarray:
         """(B,) admission mask in ONE fused launch + ONE psum: True where
@@ -349,9 +431,14 @@ class DeviceShardedBloom:
         sub-batch when arrival-order dedup inside a batch matters)."""
         if len(items) == 0:
             return np.zeros(0, bool)
-        self.bits, admitted = self._admit(
-            self.bits, jnp.asarray(self._probes(items)))
-        return np.asarray(admitted)
+        if not self.in_graph_mod:
+            self.bits, admitted = self._admit(
+                self.bits, jnp.asarray(self._probes(items)))
+            return np.asarray(admitted)
+        toks, lens, valid, B = self._stage(items)
+        self.bits, admitted = self._admit_dev(
+            self.bits, self.sharded.hasher, toks, lens, valid)
+        return np.asarray(admitted)[:B]
 
     def add(self, item) -> None:
         self.add_batch([np.atleast_1d(item)])

@@ -172,6 +172,17 @@ class Hasher:
         `lengths` (optional, variable_length specs only) gives per-row token
         counts for the paper's append-1 policy; default is full rows.
         """
+        out = self._hash_limbs(tokens, lengths)
+        if self.spec.out_bits == 32:
+            return out[..., 0]
+        return out
+
+    def _hash_limbs(self, tokens, lengths=None, mod_m=None):
+        """Shared pure-JAX body of `__call__`/`probe_indices`: (..., N)
+        tokens -> (..., K, 2) epilogue slots. Without mod_m the slots are
+        the (hi, lo) accumulator limbs; with a `limbs.ModPlan` the backend
+        fuses the Barrett reduction into its epilogue (DESIGN.md §2) and
+        slot 0 is the probe index, slot 1 the finished 32-bit hash."""
         spec = self.spec
         toks = jnp.asarray(tokens)
         batch_shape = toks.shape[:-1]
@@ -190,13 +201,11 @@ class Hasher:
             if not spec.variable_length:
                 raise ValueError("lengths only apply with variable_length=True")
             code = jnp.asarray(lengths).reshape((-1,)).astype(I32)
-        out = self._accumulate(toks2, code, W)  # (B, K, 2)
-        if spec.out_bits == 32:
-            return out[:, :, 0].reshape(*batch_shape, spec.n_hashes)
+        out = self._accumulate(toks2, code, W, mod_m)  # (B, K, 2)
         return out.reshape(*batch_shape, spec.n_hashes, 2)
 
-    def _accumulate(self, toks2, code, W):
-        """(B, W) x length codes -> (B, K, 2) finished (hi, lo) limbs."""
+    def _accumulate(self, toks2, code, W, mod_m=None):
+        """(B, W) x length codes -> (B, K, 2) finished epilogue slots."""
         from ..kernels import multihash as mhk
         from ..kernels import ref
 
@@ -206,7 +215,7 @@ class Hasher:
         plan = self.plan
         if plan.backend == "jnp":
             return ref.multihash_ref(toks2, kh, kl, code, m1,
-                                     family=self.spec.family)
+                                     family=self.spec.family, mod_m=mod_m)
         B, _ = toks2.shape
         bb = plan.block_b
         bn = min(plan.block_n, _even(W))
@@ -219,7 +228,8 @@ class Hasher:
         kl_p = jnp.pad(kl, ((0, 0), (0, Wp - W)))
         out = mhk.multihash_blocks(
             toks_p, kh_p, kl_p, code_p, m1, family=self.spec.family,
-            block_b=bb, block_n=bn, interpret=(plan.backend == "interpret"))
+            block_b=bb, block_n=bn, interpret=(plan.backend == "interpret"),
+            mod_m=mod_m)
         return out[:B]
 
     def shard_ids(self, tokens, n_shards: int, lengths=None):
@@ -234,6 +244,26 @@ class Hasher:
         h = out[..., 0] if self.spec.out_bits == 32 else out[..., 0, 0]
         hi, _ = limbs.mul32_full(h, jnp.uint32(n_shards))
         return hi.astype(I32)
+
+    def probe_indices(self, tokens, plan, lengths=None):
+        """(..., N) tokens -> (..., K) uint32 Bloom probe indices in [0, m):
+        the full 64-bit accumulators mod `plan.m` -- the exact single-device
+        `BloomFilter` formula (`h % m` on the uint64 accumulator). The
+        Barrett digit reduction (`limbs.mod_u64`) runs FUSED in the
+        backend's epilogue (the kernel `mod_m=` path: the accumulator never
+        leaves registers before reducing), so this is pure JAX
+        (jit/vmap/shard_map-safe, zero host syncs).
+
+        plan: a `limbs.ModPlan` (or an int modulus, promoted at trace time).
+        Requires an out_bits=64 spec: probe identity is defined on the full
+        accumulator, not the finished 32-bit hash.
+        """
+        if self.spec.out_bits != 64:
+            raise ValueError("probe_indices needs out_bits=64 (the mod-m "
+                             "reduction consumes the full accumulator)")
+        if not isinstance(plan, limbs.ModPlan):
+            plan = limbs.ModPlan.for_modulus(plan)
+        return self._hash_limbs(tokens, lengths, mod_m=plan)[..., 0]
 
     # -- host-convenience batched engine -------------------------------------
 

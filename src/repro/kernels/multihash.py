@@ -67,7 +67,7 @@ def _mask_tile(toks, lens, j):
 
 
 def _multihash_kernel(tok_ref, kh_ref, kl_ref, len_ref, m1_ref, out_ref,
-                      *, family: str, n_hashes: int):
+                      *, family: str, n_hashes: int, mod_m=None):
     """Grid cell (i, j): fold one (block_b, block_n) tile into K accumulators.
 
     j (the n axis) is the innermost grid dimension, so each row-block's
@@ -107,18 +107,26 @@ def _multihash_kernel(tok_ref, kh_ref, kl_ref, len_ref, m1_ref, out_ref,
     @pl.when(j == pl.num_programs(1) - 1)
     def _epilogue():
         # fused finish: + m1, then >>32 == "hash is the hi limb" (slot 0).
+        # With mod_m the Bloom probe reduction also fuses here: slot 0 is
+        # the full 64-bit accumulator mod m (limbs.mod_u64, DESIGN.md §2),
+        # slot 1 keeps the finished 32-bit hash -- the ModPlan reciprocal
+        # limbs are numpy-scalar literals, so the kernel stays constant-free.
         for k in range(n_hashes):
             m1h = jnp.broadcast_to(m1_ref[k, 0], (bb,))
             m1l = jnp.broadcast_to(m1_ref[k, 1], (bb,))
             hi, lo = limbs.add64(
                 (out_ref[:, k, 0], out_ref[:, k, 1]), (m1h, m1l))
-            out_ref[:, k, 0] = hi
-            out_ref[:, k, 1] = lo
+            if mod_m is None:
+                out_ref[:, k, 0] = hi
+                out_ref[:, k, 1] = lo
+            else:
+                out_ref[:, k, 0] = limbs.mod_u64((hi, lo), mod_m)
+                out_ref[:, k, 1] = hi
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("family", "block_b", "block_n", "interpret"),
+    static_argnames=("family", "block_b", "block_n", "interpret", "mod_m"),
 )
 def multihash_blocks(
     tokens,
@@ -131,6 +139,7 @@ def multihash_blocks(
     block_b: int = 8,
     block_n: int = 1024,
     interpret: bool = False,
+    mod_m=None,
 ):
     """Raw fused entry: (B, N) u32 tokens x (K, N) key planes -> (B, K, 2).
 
@@ -138,6 +147,10 @@ def multihash_blocks(
     (WITHOUT m1 -- key_hi/lo[k, i] multiplies tokens[:, i]); m1 is (K, 2)
     uint32 (hi, lo); lens is the (B,) int32 length code. Output slot
     [..., 0] is the finished 32-bit hash, [..., 1] the lo limb.
+
+    mod_m (a `limbs.ModPlan`, static): fuse the Bloom probe reduction into
+    the epilogue -- slot [..., 0] becomes the full 64-bit accumulator mod m,
+    slot [..., 1] the finished 32-bit hash.
     """
     B, N = tokens.shape
     K = key_hi.shape[0]
@@ -148,7 +161,8 @@ def multihash_blocks(
     assert block_n % 2 == 0
     if family not in ("multilinear", "multilinear_2x2", "multilinear_hm"):
         raise ValueError(family)
-    kernel = functools.partial(_multihash_kernel, family=family, n_hashes=K)
+    kernel = functools.partial(_multihash_kernel, family=family, n_hashes=K,
+                               mod_m=mod_m)
     grid = (B // block_b, N // block_n)
     return pl.pallas_call(
         kernel,

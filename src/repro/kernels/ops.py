@@ -33,32 +33,37 @@ def launch_count() -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("family", "block_b", "block_n", "backend")
+    jax.jit, static_argnames=("family", "block_b", "block_n", "backend",
+                              "mod_m")
 )
 def _multihash_jit(tokens, key_hi, key_lo, lens, m1, *, family, block_b,
-                   block_n, backend):
+                   block_n, backend, mod_m):
     if backend == "jnp":
-        return ref.multihash_ref(tokens, key_hi, key_lo, lens, m1, family=family)
+        return ref.multihash_ref(tokens, key_hi, key_lo, lens, m1,
+                                 family=family, mod_m=mod_m)
     return mhk.multihash_blocks(
         tokens, key_hi, key_lo, lens, m1,
         family=family, block_b=block_b, block_n=block_n,
-        interpret=(backend == "interpret"),
+        interpret=(backend == "interpret"), mod_m=mod_m,
     )
 
 
 def multihash(tokens, key_hi, key_lo, lens, m1, *, family="multilinear",
-              block_b=8, block_n=1024, backend="interpret"):
+              block_b=8, block_n=1024, backend="interpret", mod_m=None):
     """Fused multi-hash launch: (B, N) x (K, N) key planes -> (B, K, 2) u32.
 
     Inputs must already be block-aligned/padded (core.ops owns padding and
     key staging); this layer owns backend dispatch and launch accounting.
     backend: 'pallas' (TPU), 'interpret' (kernel body on CPU), 'jnp' (fused
     oracle -- the fast CPU production path).
+    mod_m (a `limbs.ModPlan`, static): fuse the probe reduction into the
+    epilogue -- output slot 0 = accumulator mod m, slot 1 = 32-bit hash.
     """
     _LAUNCHES[0] += 1
     return _multihash_jit(
         tokens, key_hi, key_lo, lens, m1,
         family=family, block_b=block_b, block_n=block_n, backend=backend,
+        mod_m=mod_m,
     )
 
 

@@ -29,11 +29,13 @@ def multilinear_accumulate_ref(tokens, key_hi, key_lo, family="multilinear"):
     return jnp.stack([hi, lo], axis=-1)
 
 
-def multihash_ref(tokens, key_hi, key_lo, lens, m1, family="multilinear"):
+def multihash_ref(tokens, key_hi, key_lo, lens, m1, family="multilinear",
+                  mod_m=None):
     """Pure-jnp oracle of the fused multi-hash kernel: (B, N) -> (B, K, 2).
 
     Same semantics as `multihash.multihash_blocks` (length-code masking,
-    m1 add, hash32 in slot 0) with the K loop unrolled over limb-jnp ops.
+    m1 add, hash32 in slot 0; with mod_m the slot-0 probe reduction and
+    slot-1 hash32) with the K loop unrolled over limb-jnp ops.
     """
     from .multihash import _mask_tile
 
@@ -60,7 +62,11 @@ def multihash_ref(tokens, key_hi, key_lo, lens, m1, family="multilinear"):
             (hi, lo),
             (jnp.broadcast_to(m1[k, 0], hi.shape),
              jnp.broadcast_to(m1[k, 1], lo.shape)))
-        outs.append(jnp.stack([hi, lo], axis=-1))
+        if mod_m is not None:
+            outs.append(jnp.stack([limbs.mod_u64((hi, lo), mod_m), hi],
+                                  axis=-1))
+        else:
+            outs.append(jnp.stack([hi, lo], axis=-1))
     return jnp.stack(outs, axis=1)
 
 

@@ -161,7 +161,12 @@ def _resolve(sym, fsdp_pods: bool, serving: bool = False):
             # the resident shard). See results/perf_log.md it4.
             return None
         names = [n for n in (("data", "pod") if fsdp_pods else ("data",)) if axis(n)]
-        return tuple(names) if names else None
+        if not names:
+            return None
+        # bare axis for the single-name case: this jax's PartitionSpec no
+        # longer equates P(('data',)) with P('data'), and every consumer
+        # (NamedSharding, _axis_size) accepts the bare name
+        return names[0] if len(names) == 1 else tuple(names)
     if sym == "M":
         return axis("model")
     return None

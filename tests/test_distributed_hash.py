@@ -141,6 +141,55 @@ def test_sharded_bloom_matches_single_device_decisions():
                                   bf.contains_batch(other))
 
 
+def test_sharded_bloom_probes_in_graph_zero_syncs_one_psum():
+    """Acceptance criterion: `add` lowers to a graph with NO host primitives
+    and ZERO psums; `contains`/fused admission carry exactly ONE psum. The
+    probe all_gather replaces the old host round-trip -- a device-to-device
+    collective, not a sync."""
+    dsb = DeviceShardedBloom(n_items=128, fp_rate=1e-2)
+    toks, lens, valid, _ = dsb._stage(_ragged(9, 12))
+    args = (dsb.bits, dsb.sharded.hasher, toks, lens, valid)
+    j_add = str(jax.make_jaxpr(dsb._add_dev)(*args))
+    j_con = str(jax.make_jaxpr(dsb._contains_dev)(*args))
+    j_adm = str(jax.make_jaxpr(dsb._admit_dev)(*args))
+    for jaxpr in (j_add, j_con, j_adm):
+        for bad in ("callback", "host_callback", "device_get", "infeed"):
+            assert bad not in jaxpr, f"host primitive {bad!r} in jaxpr"
+    assert j_add.count("psum") == 0
+    assert j_con.count("psum") == 1
+    assert j_adm.count("psum") == 1
+
+
+def test_sharded_bloom_in_graph_matches_host_mod_path():
+    """A/B: the in-graph Barrett reduction and the legacy host `h % m`
+    round-trip produce identical bits and identical decisions."""
+    items, other = _ragged(200, 16), _ragged(200, 16)
+    dev = DeviceShardedBloom(n_items=200, fp_rate=1e-3)
+    host = DeviceShardedBloom(n_items=200, fp_rate=1e-3, in_graph_mod=False)
+    assert dev.plan.m == dev.m and not dev.plan.is_pow2
+    dev.add_batch(items)
+    host.add_batch(items)
+    np.testing.assert_array_equal(np.asarray(dev.bits), np.asarray(host.bits))
+    np.testing.assert_array_equal(dev.contains_batch(other),
+                                  host.contains_batch(other))
+    np.testing.assert_array_equal(dev.check_and_add_batch(other),
+                                  host.check_and_add_batch(other))
+
+
+def test_sharded_bloom_dense_input_and_row_bucketing():
+    """Dense (B, N) input (no ragged lengths) through the in-graph path,
+    with B chosen to exercise the pad-to-D-multiple + pow2 row bucket."""
+    toks = _toks(7, 13)
+    bf = BloomFilter(n_items=64, fp_rate=1e-2)
+    dsb = DeviceShardedBloom(n_items=64, fp_rate=1e-2)
+    bf.add_batch(toks)
+    dsb.add_batch(toks)
+    assert dsb.contains_batch(toks).all()
+    probe = _toks(11, 13)
+    np.testing.assert_array_equal(dsb.contains_batch(probe),
+                                  bf.contains_batch(probe))
+
+
 def test_sharded_bloom_fused_admission():
     items = _ragged(128, 16)
     dsb = DeviceShardedBloom(n_items=256, fp_rate=1e-3)
@@ -228,6 +277,32 @@ def test_multi_device_bit_identity_and_bloom():
                                       bf.contains_batch(other))
         loads = np.bincount(dsb.owner_shards(items), minlength=8)
         assert (loads > 0).all(), loads  # Lemire routing spreads the load
+        # in-graph mod == legacy host h%m round-trip on a REAL 8-way mesh
+        hostmod = DeviceShardedBloom(n_items=300, fp_rate=1e-3,
+                                     in_graph_mod=False)
+        hostmod.add_batch(items)
+        np.testing.assert_array_equal(np.asarray(dsb.bits),
+                                      np.asarray(hostmod.bits))
+        np.testing.assert_array_equal(dsb.check_and_add_batch(other),
+                                      hostmod.check_and_add_batch(other))
+        # Barrett digit reduction under shard_map: edge moduli incl. m=1,
+        # pow2 and 2^32-1 stay bit-identical to numpy's uint64 %
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core.limbs import ModPlan, mod_u64
+        from repro.parallel.sharding import data_mesh
+        hs = rng.integers(0, 2**64, size=64, dtype=np.uint64)
+        hs[:3] = [0, 2**64 - 1, 2**32]
+        hi = jnp.asarray((hs >> np.uint64(32)).astype(np.uint32))
+        lo = jnp.asarray((hs & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+        mesh = data_mesh()
+        for m in (1, 2, 97, 1024, 2**31 + 1, 2**32 - 1):
+            plan = ModPlan.for_modulus(m)
+            fn = jax.jit(shard_map(
+                lambda a, b: mod_u64((a, b), plan), mesh=mesh,
+                in_specs=(P("data"), P("data")), out_specs=P("data")))
+            np.testing.assert_array_equal(
+                np.asarray(fn(hi, lo)), (hs % np.uint64(m)).astype(np.uint32))
         print("OK")
     """
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],

@@ -25,7 +25,6 @@ def _run(code, n_dev=8):
 
 
 @pytest.mark.xfail(
-    strict=False,
     reason="pre-existing: the lowered train cell differentiates through the "
            "remat optimization_barrier (unimplemented autodiff rule); "
            "quarantined so CI is green-on-seed")

@@ -1,0 +1,134 @@
+"""Property tests for the 64-mod-m Barrett digit reduction (DESIGN.md §2).
+
+`limbs.mod_u64` / `limbs.mw_mod` and the host twin `hostref.mod_u64_np`
+against arbitrary-precision Python-int `%` over random (h, m) pairs plus
+the adversarial edges named in the acceptance criteria: m=1, m=2,
+m=2^32-1, power-of-two m, and h=2^64-1. Deterministic seeded randomness
+(hypothesis is optional on driver images; this suite must always run).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hostref, limbs
+from repro.core.limbs import ModPlan
+
+RNG = np.random.Generator(np.random.Philox(key=np.uint64(0x60D)))
+
+EDGE_H = np.array([0, 1, 2, 2**16, 2**31, 2**32 - 1, 2**32, 2**32 + 1,
+                   2**48, 2**63, 2**64 - 2, 2**64 - 1], dtype=np.uint64)
+EDGE_M = [1, 2, 3, 4, 5, 7, 64, 2**16 - 1, 2**16, 2**16 + 1, 2**31 - 1,
+          2**31, 2**31 + 1, 2**32 - 2, 2**32 - 1]
+
+
+def _split(h):
+    return ((h >> np.uint64(32)).astype(np.uint32),
+            (h & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+def _random_h(n):
+    return RNG.integers(0, 2**64, size=n, dtype=np.uint64)
+
+
+@pytest.mark.parametrize("m", EDGE_M)
+def test_mod_u64_edge_moduli_vs_python_int(m):
+    h = np.concatenate([_random_h(512), EDGE_H])
+    plan = ModPlan.for_modulus(m)
+    got = np.asarray(limbs.mod_u64(_split(h), plan))
+    want = np.asarray([int(x) % m for x in h], np.uint32)
+    np.testing.assert_array_equal(got, want)
+    assert (got < m).all() or m == 1
+
+
+def test_mod_u64_random_moduli_vs_python_int():
+    h = np.concatenate([_random_h(256), EDGE_H])
+    for m in RNG.integers(1, 2**32, size=64):
+        plan = ModPlan.for_modulus(int(m))
+        got = np.asarray(limbs.mod_u64(_split(h), plan))
+        want = np.asarray([int(x) % int(m) for x in h], np.uint32)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m", EDGE_M)
+def test_host_twin_bit_exact(m):
+    """hostref.mod_u64_np == limbs.mod_u64 == numpy % for the same inputs."""
+    h = np.concatenate([_random_h(512), EDGE_H])
+    host = hostref.mod_u64_np(h, m)
+    np.testing.assert_array_equal(host, (h % np.uint64(m)).astype(np.uint32))
+    np.testing.assert_array_equal(
+        host, np.asarray(limbs.mod_u64(_split(h), ModPlan.for_modulus(m))))
+
+
+def test_mod_u64_composes_under_jit_and_vmap():
+    h = _random_h(64)
+    plan = ModPlan.for_modulus(0xDEADBEEF)
+    hi, lo = _split(h)
+    want = (h % np.uint64(plan.m)).astype(np.uint32)
+    jitted = jax.jit(lambda a, b: limbs.mod_u64((a, b), plan))
+    np.testing.assert_array_equal(np.asarray(jitted(hi, lo)), want)
+    vm = jax.vmap(lambda a, b: limbs.mod_u64((a, b), plan))
+    np.testing.assert_array_equal(np.asarray(vm(jnp.asarray(hi), jnp.asarray(lo))), want)
+    # trace-level purity: no host primitives in the jaxpr
+    jaxpr = str(jax.make_jaxpr(jitted)(hi, lo))
+    for bad in ("callback", "device_get", "infeed"):
+        assert bad not in jaxpr
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 7, 2**16, 12345, 2**31 + 1, 2**32 - 1])
+def test_mw_mod_multiword_vs_python_int(m):
+    """4-limb (128-bit) Horner reduction against arbitrary-precision %."""
+    vals = ([int(v) for v in _random_h(40)]
+            + [int(a) << 64 | int(b) for a, b in
+               zip(_random_h(40), _random_h(40))]
+            + [0, 1, (1 << 128) - 1, 1 << 96, 1 << 64, (1 << 64) - 1])
+    lb = tuple(np.asarray([(v >> (32 * i)) & 0xFFFFFFFF for v in vals],
+                          np.uint32) for i in range(4))
+    got = np.asarray(limbs.mw_mod(lb, ModPlan.for_modulus(m)))
+    np.testing.assert_array_equal(got, np.asarray([v % m for v in vals],
+                                                  np.uint32))
+
+
+def test_mod_plan_validation_and_hashability():
+    for bad in (0, -1, 1 << 32, (1 << 32) + 5):
+        with pytest.raises(ValueError):
+            ModPlan.for_modulus(bad)
+        with pytest.raises(ValueError):
+            hostref.mod_u64_np(np.uint64(1), bad)
+    # frozen + hashable: usable as a jit static argument / dict key
+    a, b = ModPlan.for_modulus(97), ModPlan.for_modulus(97)
+    assert a == b and hash(a) == hash(b) and len({a, b}) == 1
+    # pow2 plans skip the reciprocal entirely
+    p = ModPlan.for_modulus(1024)
+    assert p.is_pow2 and (p.mu0, p.mu1, p.mu2) == (0, 0, 0)
+    # reciprocal limbs reassemble to floor(2^96/m) + 1
+    q = ModPlan.for_modulus(0xDEADBEEF)
+    mu = q.mu0 | (q.mu1 << 32) | (q.mu2 << 64)
+    assert mu == (1 << 96) // 0xDEADBEEF + 1
+
+
+def test_hasher_probe_indices_matches_bloom_formula():
+    """Hasher.probe_indices == the single-device BloomFilter `h % m` on the
+    very same uint64 accumulators, for non-pow2 and pow2 m."""
+    from repro.hash import Hasher, HashSpec
+
+    h = Hasher.from_spec(HashSpec(family="multilinear", n_hashes=3,
+                                  out_bits=64, variable_length=True,
+                                  seed=0x60D), max_len=16)
+    toks = RNG.integers(0, 2**32, size=(9, 11), dtype=np.uint64
+                        ).astype(np.uint32)
+    acc = h.hash_batch(toks, backend="host")  # (9, 3) uint64
+    h_k = h.with_plan(h.plan.__class__(backend="interpret", block_b=4,
+                                       block_n=8))
+    for m in (4313, 1, 97, 1024, 2**31 - 1, 2**32 - 1):
+        plan = ModPlan.for_modulus(m)
+        want = (acc % np.uint64(m)).astype(np.uint32)
+        # jnp backend AND the actual kernel body (interpret): both lower
+        # probe_indices through the fused mod_m epilogue
+        np.testing.assert_array_equal(
+            np.asarray(h.probe_indices(jnp.asarray(toks), plan)), want)
+        np.testing.assert_array_equal(
+            np.asarray(h_k.probe_indices(jnp.asarray(toks), plan)), want)
+    with pytest.raises(ValueError, match="out_bits=64"):
+        Hasher.from_spec(HashSpec(n_hashes=1, seed=1)).probe_indices(
+            jnp.asarray(toks), 97)

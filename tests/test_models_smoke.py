@@ -19,7 +19,6 @@ pytestmark = pytest.mark.slow
 # this jax version. whisper (encdec path, no barrier in its grad) passes and
 # stays a hard assertion.
 _OPT_BARRIER_XFAIL = pytest.mark.xfail(
-    strict=False,
     reason="pre-existing: Differentiation rule for 'optimization_barrier' "
            "not implemented (autodiff through the train-step barrier)")
 _GRAD_BROKEN_ARCHS = frozenset(ARCH_IDS) - {"whisper_large_v3"}

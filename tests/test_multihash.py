@@ -230,6 +230,42 @@ def test_fused_epilogue_matches_seed_kernel():
         np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("m", [4313, 97, 1024, 1, 2**31 - 1, 2**32 - 1])
+def test_mod_m_epilogue_bit_identical_across_backends(family, m):
+    """mod_m= fuses the Bloom probe reduction into the kernel epilogue:
+    slot 0 == the host `h % m` on the full accumulator, slot 1 == hash32,
+    identical on jnp and interpret (pallas shares the kernel body) for
+    non-pow2, pow2, m=1 and the 2^32-1 extreme."""
+    import jax.numpy as jnp
+
+    from repro.core.limbs import ModPlan
+
+    items = _ragged(6, 21, min_len=0)
+    mkb = MultiKeyBuffer(seed=0x40D, n_hashes=3)
+    acc = cops.hash_tokens_device_multi(items, keys=mkb, family=family,
+                                        backend="host", out_bits=64)
+    h32 = cops.hash_tokens_device_multi(items, keys=mkb, family=family,
+                                        backend="host")
+    want = (acc % np.uint64(m)).astype(np.uint32)
+
+    toks = np.zeros((8, 32), np.uint32)
+    lens = np.full(8, -(32 + 1), np.int32)
+    for i, row in enumerate(items):
+        toks[i, : len(row)] = row
+        lens[i] = len(row)
+    kh, kl = mkb.planes(33)
+    m1 = np.stack([kh[:, 0], kl[:, 0]], axis=1)
+    for backend in ("jnp", "interpret"):
+        out = np.asarray(kops.multihash(
+            jnp.asarray(toks), jnp.asarray(kh[:, 1:]), jnp.asarray(kl[:, 1:]),
+            jnp.asarray(lens), jnp.asarray(m1), family=family,
+            block_b=4, block_n=8, backend=backend,
+            mod_m=ModPlan.for_modulus(m)))[: len(items)]
+        np.testing.assert_array_equal(out[:, :, 0], want)
+        np.testing.assert_array_equal(out[:, :, 1], h32)
+
+
 def test_host_oracle_masking_edges():
     """Length-code edge cases: L=0 (pure sentinel), L=N (sentinel lands in
     the padding), fixed rows with odd N (HM even-pad key stays live)."""

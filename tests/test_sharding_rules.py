@@ -24,12 +24,6 @@ def run_sub(code: str, n_dev: int = 8) -> str:
     return out.stdout
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing: spec_for wraps a single fsdp axis as a 1-tuple "
-           "(('data',)) which this jax version's PartitionSpec no longer "
-           "equates with the bare axis name; quarantined so CI is "
-           "green-on-seed")
 def test_param_rules_on_mesh():
     out = run_sub("""
         import jax, json
@@ -59,7 +53,6 @@ def test_param_rules_on_mesh():
 
 @pytest.mark.slow  # spins a full train step in a subprocess: full lane
 @pytest.mark.xfail(
-    strict=False,
     reason="pre-existing: sharded train step differentiates through the "
            "remat optimization_barrier (unimplemented autodiff rule); "
            "quarantined so CI is green-on-seed")

@@ -18,7 +18,6 @@ pytestmark = pytest.mark.slow
 
 
 @pytest.mark.xfail(
-    strict=False,
     reason="pre-existing: the train phase differentiates through the remat "
            "optimization_barrier (unimplemented autodiff rule); quarantined "
            "so CI is green-on-seed")

@@ -19,7 +19,6 @@ pytestmark = pytest.mark.slow
 # optimization_barrier differentiation rule. test_straggler_watchdog does
 # not differentiate and stays a hard assertion.
 _OPT_BARRIER_XFAIL = pytest.mark.xfail(
-    strict=False,
     reason="pre-existing: Differentiation rule for 'optimization_barrier' "
            "not implemented (train step autodiff)")
 
