@@ -99,6 +99,59 @@ def _bench_meshes(meshes: "list[tuple[str, object]]") -> None:
                 "in-graph Barrett mod + probe all_gather", n_bytes=n_bytes)
 
 
+def _bench_service() -> None:
+    """p50/p99 admission latency through the fault-tolerant service
+    (repro.hash.service), healthy vs under a seeded fault plan. Report-only
+    rows (never gated: tail latency on a shared runner is noise-bound). The
+    virtual clock means injected timeouts/backoffs cost ZERO wall time, so
+    the 'faulty' rows isolate the service's retry/breaker/journal
+    control-flow overhead -- the part this repo owns."""
+    import time as _time
+
+    from repro.hash import (AdmissionService, FaultEvent, FaultPlan,
+                            FaultyTransport, InProcessTransport,
+                            VirtualClock, bloom_shard_backends)
+
+    fast = common.FAST
+    n_batches = 16 if fast else 64
+    B = 64
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(0xAD41)))
+    batches = [[rng.integers(0, 5000, int(rng.integers(4, 16)),
+                             dtype=np.uint32).astype(np.uint32)
+                for _ in range(B)] for _ in range(n_batches)]
+    n_bytes = int(sum(len(r) for b in batches for r in b) * 4 / n_batches)
+    # warm every pow2 hash-launch bucket ONCE up front: the in-process jit
+    # cache is shared across modes, so without this the first mode timed
+    # would pay all the compiles and its p99 would measure XLA, not the
+    # service
+    warm = AdmissionService(
+        InProcessTransport(bloom_shard_backends(4, 1 << 16)),
+        clock=VirtualClock())
+    for batch in batches:
+        warm.admit_batch(batch)
+    for mode in ("healthy", "faulty"):
+        backends = bloom_shard_backends(4, 1 << 16)
+        clock = VirtualClock()
+        transport = InProcessTransport(backends)
+        if mode == "faulty":
+            plan = FaultPlan(29, events=[FaultEvent("crash", shard=1,
+                                                    at=3, until=9)],
+                             p_timeout=0.02, p_drop=0.02, p_corrupt=0.02)
+            transport = FaultyTransport(transport, plan, clock)
+        svc = AdmissionService(transport, clock=clock, policy="fail_open")
+        svc.admit_batch(batches[0])  # warmup: jit the hash launches
+        lat = []
+        for batch in batches:
+            t0 = _time.perf_counter()
+            svc.admit_batch(batch)
+            lat.append(_time.perf_counter() - t0)
+        note = ("L1/L2 service, no faults" if mode == "healthy" else
+                "crash window + 6% random faults (retry/breaker path)")
+        for q in (50, 99):
+            row(f"distributed/service_admit/B{B}/{mode}/p{q}",
+                float(np.percentile(lat, q)) * 1e6, note, n_bytes=n_bytes)
+
+
 def run() -> None:
     """benchmarks.run module hook: live device set (D=1 on the CI runner)."""
     from repro.parallel.sharding import data_mesh
@@ -106,6 +159,7 @@ def run() -> None:
     mesh = data_mesh()
     d = mesh.devices.size
     _bench_meshes([("single", None), (f"D{d}", mesh)])
+    _bench_service()
 
 
 def _child(json_path: str) -> None:
@@ -116,6 +170,7 @@ def _child(json_path: str) -> None:
     d = full.devices.size
     _bench_meshes([("single", None), ("D1", data_mesh(max_devices=1)),
                    (f"D{d}", full)])
+    _bench_service()
     payload = {"schema": "bench-v1", "ref_hz": common.REF_HZ,
                "fast": common.FAST, "devices": d, "rows": common.JSON_ROWS}
     with open(json_path, "w") as f:

@@ -1,3 +1,3 @@
 """Checkpointing with Multilinear integrity fingerprints."""
 from . import checkpointer  # noqa: F401
-from .checkpointer import Checkpointer  # noqa: F401
+from .checkpointer import Checkpointer, CorruptCheckpointError  # noqa: F401

@@ -38,11 +38,40 @@ def _flatten(tree):
     return [(_leaf_path(kp), leaf) for kp, leaf in flat], treedef
 
 
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint leaf failed its Multilinear integrity fingerprint."""
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
+        # verify() results memoized per step, keyed on a stat signature of
+        # the checkpoint files -- latest_valid() stops re-fingerprinting
+        # every checkpoint on every call
+        self._verify_cache: dict[int, tuple[tuple, bool]] = {}
+        self._recover()
+
+    def _recover(self) -> None:
+        """Sweep crash debris from interrupted saves. A `step_N.old` next
+        to a committed `step_N` is the replaced checkpoint whose delete
+        never ran: remove it. A `step_N.old` with NO `step_N` means the
+        crash hit between rename-aside and commit: rename it back (the old
+        checkpoint is intact and is the best state we have). Orphaned
+        `step_N.tmp` dirs are partial writes: drop them."""
+        for name in os.listdir(self.dir):
+            full = os.path.join(self.dir, name)
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                shutil.rmtree(full, ignore_errors=True)
+                continue
+            m = re.fullmatch(r"(step_\d+)\.old", name)
+            if m:
+                final = os.path.join(self.dir, m.group(1))
+                if os.path.exists(final):
+                    shutil.rmtree(full, ignore_errors=True)
+                else:
+                    os.rename(full, final)
 
     # -- save ---------------------------------------------------------------
 
@@ -72,9 +101,20 @@ class Checkpointer:
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        # commit with NO torn window: the previous version of this step is
+        # renamed ASIDE (cheap, atomic) rather than deleted first, so a
+        # crash at any point leaves either the old or the new checkpoint
+        # restorable -- never neither. `_recover` sweeps the `.old` debris
+        # a crash can leave behind.
+        old = final + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
         if os.path.exists(final):
-            shutil.rmtree(final)
+            os.rename(final, old)
         os.rename(tmp, final)  # atomic commit
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        self._verify_cache.pop(step, None)
         self._gc()
         return final
 
@@ -82,6 +122,7 @@ class Checkpointer:
         steps = sorted(self.steps())
         for s in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+            self._verify_cache.pop(s, None)
 
     # -- restore ------------------------------------------------------------
 
@@ -93,7 +134,35 @@ class Checkpointer:
                 out.append(int(m.group(1)))
         return sorted(out)
 
+    def _stat_sig(self, step: int) -> tuple | None:
+        """(mtime_ns, size) signature of a checkpoint's files -- the verify
+        cache key. None if the checkpoint is missing a file."""
+        path = os.path.join(self.dir, f"step_{step}")
+        try:
+            return tuple(
+                (fn, os.stat(os.path.join(path, fn)).st_mtime_ns,
+                 os.stat(os.path.join(path, fn)).st_size)
+                for fn in ("manifest.json", "arrays.npz"))
+        except OSError:
+            return None
+
     def verify(self, step: int) -> bool:
+        """True iff every leaf fingerprint checks out. Results are cached
+        per (step, file stat signature): repeated `latest_valid()` calls
+        cost a couple of os.stat's, not a full re-fingerprint, and any
+        on-disk change (rewrite, corruption with a size/mtime change)
+        invalidates the cache entry."""
+        sig = self._stat_sig(step)
+        if sig is None:
+            return False
+        cached = self._verify_cache.get(step)
+        if cached is not None and cached[0] == sig:
+            return cached[1]
+        ok = self._verify_uncached(step)
+        self._verify_cache[step] = (sig, ok)
+        return ok
+
+    def _verify_uncached(self, step: int) -> bool:
         path = os.path.join(self.dir, f"step_{step}")
         try:
             with open(os.path.join(path, "manifest.json")) as f:
@@ -139,7 +208,12 @@ class Checkpointer:
             meta = manifest["leaves"][p]
             arr = data[meta["key"]]
             want = fingerprint_bytes(arr.tobytes())
-            assert f"{want:016x}" == meta["fingerprint"], f"corrupt leaf {p}"
+            if f"{want:016x}" != meta["fingerprint"]:
+                # a real error, not an assert: survives `python -O` and is
+                # catchable by resume logic (fall back to latest_valid())
+                raise CorruptCheckpointError(
+                    f"step {step}: leaf {p!r} fingerprint mismatch "
+                    f"(got {want:016x}, manifest {meta['fingerprint']})")
             if meta["dtype"] == "bfloat16":
                 arr = arr.astype(jnp.bfloat16)
             if sh_flat is not None:

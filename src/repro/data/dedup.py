@@ -77,6 +77,24 @@ class BloomFilter:
         idx = (self._hashes(items) % np.uint64(self.m)).astype(np.int64)
         return self._test(idx.ravel()).reshape(idx.shape).all(axis=1)
 
+    def check_and_add_batch(self, items) -> np.ndarray:
+        """(B,) bool admission mask (True = newly admitted), ARRIVAL-ORDER
+        exact within the batch: item i is tested against the pre-batch bits
+        plus the bits set by items 0..i-1, so an in-batch duplicate rejects
+        (unlike `DeviceShardedBloom`'s pre-batch-state contract). Hashing
+        stays one fused launch; the sequential test/set touches only host
+        bit words. This is the admission-service shard-backend surface
+        (`repro.hash.distributed.FilterShardBackend`)."""
+        if len(items) == 0:
+            return np.zeros(0, bool)
+        idx = (self._hashes(items) % np.uint64(self.m)).astype(np.int64)
+        out = np.zeros(len(idx), bool)
+        for i, row in enumerate(idx):
+            if not self._test(row).all():
+                self._set(row)
+                out[i] = True
+        return out
+
 
 class ExactDedup:
     """64-bit fingerprint set. Collision probability for N docs is

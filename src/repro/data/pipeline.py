@@ -50,9 +50,16 @@ class HashPipeline:
     hash evaluation -- fused into one launch per batch in `admit_batch`.
     """
 
-    def __init__(self, cfg: PipelineConfig, mesh=None):
+    def __init__(self, cfg: PipelineConfig, mesh=None, admission=None):
         self.cfg = cfg
         self.seen_fingerprints: set[int] = set()
+        # optional fault-tolerant dedup: when an `AdmissionService`
+        # (repro.hash.service) is supplied, the duplicate decision is
+        # delegated to its hierarchical L1/L2 filters (approximate, Bloom
+        # fp_rate; shard-scalable; keeps deciding through backend outages
+        # per its degradation policy) instead of the exact local set.
+        # Split/shard routing is unchanged either way.
+        self.admission = admission
         # fp / split / shard as one fused 3-hash Hasher (explicit seeds)
         self.route_hasher = Hasher.from_spec(HashSpec(
             family="multilinear", n_hashes=3, out_bits=64,
@@ -75,13 +82,17 @@ class HashPipeline:
             return self._sharded.hash_batch(docs)
         return self.route_hasher.hash_batch(docs, backend=backend)
 
-    def _route_one(self, fp: int, h_split: int, h_shard: int) -> str:
+    def _route_one(self, fp: int, h_split: int, h_shard: int,
+                   dup: bool | None = None) -> str:
         c = self.cfg
         if c.dedup:
-            if fp in self.seen_fingerprints:
+            if dup is None:  # local exact-set authority
+                dup = fp in self.seen_fingerprints
+                if not dup:
+                    self.seen_fingerprints.add(fp)
+            if dup:
                 self.stats["dup"] += 1
                 return "dup"
-            self.seen_fingerprints.add(fp)
         if h_split % 100 < c.eval_pct:
             self.stats["eval"] += 1
             return "eval"
@@ -95,20 +106,32 @@ class HashPipeline:
         """Route one document: 'train' | 'eval' | 'dup' | 'other_shard'."""
         self.stats["docs"] += 1
         h = self._route_hashes([np.atleast_1d(tokens)], backend="host")[0]
-        return self._route_one(int(h[0]), int(h[1]) >> 32, int(h[2]) >> 32)
+        dup = None
+        if self.admission is not None and self.cfg.dedup:
+            dup = not bool(self.admission.admit_batch(
+                [np.atleast_1d(tokens)])[0])
+        return self._route_one(int(h[0]), int(h[1]) >> 32, int(h[2]) >> 32,
+                               dup=dup)
 
     def admit_batch(self, docs) -> list[str]:
         """Route a batch of documents with ONE fused 3-hash launch.
 
         Bit-identical to per-document `admit` (duplicates within the batch
-        are caught in arrival order); stats update as if streamed.
+        are caught in arrival order); stats update as if streamed. With an
+        admission service attached, the whole batch's dedup verdicts come
+        from one `AdmissionService.admit_batch` call (grouped per shard).
         """
         if len(docs) == 0:
             return []
         hashes = self._route_hashes(list(docs))
         self.stats["docs"] += len(docs)
-        return [self._route_one(int(h[0]), int(h[1]) >> 32, int(h[2]) >> 32)
-                for h in hashes]
+        dups: list[bool | None] = [None] * len(docs)
+        if self.admission is not None and self.cfg.dedup:
+            dups = [not bool(ok)
+                    for ok in self.admission.admit_batch(list(docs))]
+        return [self._route_one(int(h[0]), int(h[1]) >> 32, int(h[2]) >> 32,
+                                dup=d)
+                for h, d in zip(hashes, dups)]
 
     def epoch_order(self, doc_hashes: np.ndarray, epoch: int) -> np.ndarray:
         """Reproducible global shuffle: argsort of salted re-hash."""

@@ -13,9 +13,15 @@ deterministic defaults), streaming (two-level incremental fingerprints),
 sharding (Lemire-reduced shard routing). The legacy `core.ops` free
 functions remain as bit-identical deprecation shims over this package.
 """
-from . import distributed, keyring, sharding, streaming  # noqa: F401
-from .distributed import DeviceShardedBloom, ShardedHasher  # noqa: F401
+from . import distributed, faults, keyring, service, sharding, streaming  # noqa: F401
+from .distributed import (  # noqa: F401
+    DeviceShardedBloom, FilterShardBackend, ShardedHasher,
+    bloom_shard_backends)
+from .faults import FaultEvent, FaultPlan, FaultyTransport  # noqa: F401
 from .hasher import Hasher, HashPlan, default_plan  # noqa: F401
+from .service import (  # noqa: F401
+    AdmissionService, BreakerConfig, CircuitBreaker, InProcessTransport,
+    RetryPolicy, ShardReply, ShardRequest, VirtualClock)
 from .sharding import reduce_range, shard_assignment  # noqa: F401
 from .spec import DEFAULT_SEED, FAMILY_NAMES, HashSpec  # noqa: F401
 from .streaming import StreamState, fingerprint_bytes, stream_digest_host  # noqa: F401

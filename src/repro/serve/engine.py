@@ -29,11 +29,14 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    #: admission verdict (None = not checked / no admission service;
+    #: False = rejected as a duplicate, completed without decoding)
+    admitted: bool | None = None
 
 
 class ServeEngine:
     def __init__(self, api, params, *, n_slots: int = 4, max_seq: int = 256,
-                 greedy: bool = True, mesh=None):
+                 greedy: bool = True, mesh=None, admission=None):
         self.api = api
         self.params = params
         self.B = n_slots
@@ -57,7 +60,13 @@ class ServeEngine:
         self.slots: list[Request | None] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int64)
         self.caches = api.init_caches(n_slots, max_seq)
-        self.stats = {"prefix_hits": 0, "prefills": 0, "ticks": 0}
+        # optional fault-tolerant front door (repro.hash.service): duplicate
+        # prompts are rejected before they cost a prefill; the engine keeps
+        # serving through backend outages (DESIGN.md §8)
+        self.admission = admission
+        self.stats = {"prefix_hits": 0, "prefills": 0, "ticks": 0,
+                      "degraded_ticks": 0, "l1_only_admits": 0,
+                      "admission_rejects": 0, "admission_errors": 0}
 
     # -- prefix cache (paper fingerprints, DESIGN.md §3/§7) ------------------
 
@@ -101,6 +110,32 @@ class ServeEngine:
         for rid, fp in zip(req_ids, fps):
             self._req_key_cache[rid] = int(fp)
 
+    # -- admission (fault-tolerant front door, DESIGN.md §8) -----------------
+
+    def _admit_wave(self, reqs: "list[Request]") -> None:
+        """Admission-check one slot-pool's worth of pending requests through
+        the `AdmissionService` (L1/L2 filters + retry/breaker). Called with
+        the NEXT wave while the current decode step is still in flight, so
+        L2 round-trips overlap device compute. Never raises: an admission
+        outage the service itself could not absorb falls back to serving
+        everything (the engine's job is to answer requests)."""
+        if self.admission is None:
+            return
+        todo = [r for r in reqs if r.admitted is None]
+        if not todo:
+            return
+        try:
+            mask = self.admission.admit_batch(
+                [r.prompt.astype(np.uint32) for r in todo])
+        except Exception:
+            self.stats["admission_errors"] += 1
+            for r in todo:
+                r.admitted = True
+            return
+        for r, ok in zip(todo, mask):
+            r.admitted = bool(ok)
+        self.stats["l1_only_admits"] = self.admission.stats["l1_only_admits"]
+
     # -- slot management -----------------------------------------------------
 
     def _assign(self, req: Request, slot: int):
@@ -136,14 +171,46 @@ class ServeEngine:
         req.out_tokens.append(first)
 
     def submit_all(self, requests: list[Request]):
+        # reject un-servable prompts up front, before any state is touched:
+        # a prompt of max_seq tokens has no cache room for even one decode
+        for r in requests:
+            if len(r.prompt) >= self.S:
+                raise ValueError(
+                    f"request {r.req_id}: prompt length {len(r.prompt)} >= "
+                    f"max_seq {self.S}; no decode budget -- raise max_seq "
+                    "or truncate the prompt")
         pending = list(requests)
+        self._admit_wave(pending[: self.B])  # first wave has no decode to hide behind
         self._precompute_prompt_keys(pending)
-        while pending or any(s is not None for s in self.slots):
-            # fill free slots
-            for i in range(self.B):
-                if self.slots[i] is None and pending:
-                    self._assign(pending.pop(0), i)
-            self.tick()
+        try:
+            while pending or any(s is not None for s in self.slots):
+                # fill free slots (skipping admission-rejected requests --
+                # they complete immediately with no tokens)
+                for i in range(self.B):
+                    while self.slots[i] is None and pending:
+                        req = pending.pop(0)
+                        if req.admitted is None:
+                            self._admit_wave([req])
+                        if req.admitted is False:
+                            req.done = True
+                            self.stats["admission_rejects"] += 1
+                            continue
+                        self._assign(req, i)
+                if not any(s is not None for s in self.slots):
+                    continue  # whole wave rejected; loop re-checks pending
+                logits = self._tick_launch()
+                # decode is in flight: admission-check the next wave on the
+                # host while the device works (overlap, DESIGN.md §8)
+                self._admit_wave(pending[: self.B])
+                self._tick_finish(logits)
+        finally:
+            # if _assign/tick raised mid-flight, drop the in-flight
+            # fingerprint launch and evict this submission's cached keys so
+            # a retry (or the next submit_all) starts clean -- otherwise
+            # _pending_keys/_req_key_cache leak one entry per failed request
+            self._pending_keys = None
+            for r in requests:
+                self._req_key_cache.pop(r.req_id, None)
         return requests
 
     def tick(self):
@@ -157,7 +224,15 @@ class ServeEngine:
         joined at tick 0. A production engine threads per-slot positions
         (pos as a (B,) vector) through decode_step; see DESIGN.md §5.
         """
+        self._tick_finish(self._tick_launch())
+
+    def _tick_launch(self):
+        """Dispatch one decode step (jax async dispatch: returns the
+        in-flight logits WITHOUT syncing, so the host can do admission /
+        bookkeeping while the device computes)."""
         self.stats["ticks"] += 1
+        if self.admission is not None and self.admission.degraded:
+            self.stats["degraded_ticks"] += 1
         toks = np.zeros((self.B, 1), np.int32)
         for i, req in enumerate(self.slots):
             if req is not None:
@@ -166,6 +241,10 @@ class ServeEngine:
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(toks),
             jnp.asarray(pos, jnp.int32))
+        return logits
+
+    def _tick_finish(self, logits):
+        """Materialize the decode launch (the sync point) and advance slots."""
         logits = np.asarray(logits)
         for i, req in enumerate(self.slots):
             if req is None:

@@ -1,0 +1,283 @@
+"""Admission service (fast lane): clock/retry/breaker mechanics, reply
+integrity, idempotent retries, L1/L2 hierarchy, degradation policies, and
+reconciliation -- all on the virtual clock (no real sleeping), all
+deterministic. The seed-matrix invariant sweeps live in test_chaos.py."""
+import numpy as np
+import pytest
+
+from repro.hash import (AdmissionService, BreakerConfig, CircuitBreaker,
+                        FaultEvent, FaultPlan, FaultyTransport,
+                        InProcessTransport, RetryPolicy, ShardReply,
+                        VirtualClock, bloom_shard_backends)
+from repro.hash.sharding import reduce_range
+from repro.hash.service import philox_for
+
+
+def _items(n, seed=0, lo=3, hi=12):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 1000, rng.integers(lo, hi), dtype=np.uint32)
+            for _ in range(n)]
+
+
+def _service(n_shards=4, faults=None, **kw):
+    backends = bloom_shard_backends(n_shards, 4096)
+    clock = VirtualClock()
+    transport = InProcessTransport(backends)
+    if faults is not None:
+        transport = FaultyTransport(transport, faults, clock)
+    svc = AdmissionService(transport, clock=clock, **kw)
+    return svc, backends
+
+
+# -- clock / retry / breaker mechanics --------------------------------------
+
+def test_virtual_clock_only_sleep_advances():
+    c = VirtualClock()
+    assert c.now() == 0.0
+    c.sleep(0.5)
+    c.sleep(-1.0)  # clamped: time is monotonic
+    assert c.now() == 0.5
+
+
+def test_backoff_grows_caps_and_jitters_in_bounds():
+    p = RetryPolicy(base_backoff_s=0.01, multiplier=2.0, max_backoff_s=0.05,
+                    jitter_frac=0.5)
+    mids = [p.backoff_s(k, 0.5) for k in range(5)]  # u=0.5 -> no jitter
+    assert mids == sorted(mids)
+    assert mids[0] == pytest.approx(0.01)
+    assert mids[-1] == pytest.approx(0.05)  # capped
+    lo, hi = p.backoff_s(0, 0.0), p.backoff_s(0, 1.0)
+    assert 0.0075 == pytest.approx(lo) and 0.0125 == pytest.approx(hi)
+
+
+def test_jitter_is_deterministic_per_seed_shard_ordinal():
+    a = philox_for(1, 0xBACC0FF, 2, 3).random()
+    b = philox_for(1, 0xBACC0FF, 2, 3).random()
+    c = philox_for(1, 0xBACC0FF, 2, 4).random()
+    assert a == b and a != c
+
+
+def test_breaker_state_machine():
+    clock = VirtualClock()
+    br = CircuitBreaker(BreakerConfig(failure_threshold=3,
+                                      reset_timeout_s=1.0), clock)
+    br.record_failure(); br.record_failure()
+    assert br.state == "closed"
+    br.record_success()  # consecutive counter resets
+    br.record_failure(); br.record_failure(); br.record_failure()
+    assert br.state == "open" and not br.allow()
+    clock.sleep(1.0)
+    assert br.allow() and br.state == "half_open"
+    br.record_failure()  # failed probe -> back to open, window restarts
+    assert br.state == "open"
+    clock.sleep(1.0)
+    assert br.allow() and br.state == "half_open"
+    br.record_success()
+    assert br.state == "closed"
+    assert [(f, t) for _, f, t in br.transitions] == [
+        ("closed", "open"), ("open", "half_open"), ("half_open", "open"),
+        ("open", "half_open"), ("half_open", "closed")]
+
+
+# -- wire format / fault plan ------------------------------------------------
+
+def test_reply_fingerprint_detects_corruption():
+    reply = ShardReply.for_payload(np.array([True, False, True]))
+    assert reply.verify()
+    plan = FaultPlan(0)
+    assert not plan.corrupt_reply(reply, 0, 0).verify()
+    empty = ShardReply.for_payload(np.zeros(0, bool))
+    assert not plan.corrupt_reply(empty, 0, 0).verify()
+
+
+def test_fault_plan_is_pure_and_seeded():
+    grid = [(s, q) for s in range(4) for q in range(32)]
+    p1 = FaultPlan(11, p_timeout=0.2, p_drop=0.2, p_corrupt=0.2)
+    p2 = FaultPlan(11, p_timeout=0.2, p_drop=0.2, p_corrupt=0.2)
+    p3 = FaultPlan(12, p_timeout=0.2, p_drop=0.2, p_corrupt=0.2)
+    d1 = [p1.decide(s, q).kind for s, q in grid]
+    assert d1 == [p2.decide(s, q).kind for s, q in grid]
+    assert d1 != [p3.decide(s, q).kind for s, q in grid]
+    assert set(d1) > {"ok"}  # the probabilities actually fire
+
+
+def test_fault_event_windows():
+    ev = FaultEvent("timeout", shard=1, at=2, until=5)
+    assert not ev.active(0, 3) and not ev.active(1, 1) and not ev.active(1, 5)
+    assert ev.active(1, 2) and ev.active(1, 4)
+    one = FaultEvent("drop", at=3)           # single call, every shard
+    assert one.active(0, 3) and not one.active(0, 4)
+    crash = FaultEvent("crash", shard=0, at=2)  # until=None: down for good
+    assert crash.active(0, 99) and not crash.active(0, 1)
+    with pytest.raises(ValueError):
+        FaultEvent("meteor")
+
+
+# -- healthy-path behaviour --------------------------------------------------
+
+def test_admit_matches_streaming_and_routes_by_lemire():
+    svc, _ = _service()
+    items = _items(40, seed=1)
+    mask = svc.admit_batch(items + items[:10])  # 10 in-batch duplicates
+    assert mask[:40].all() and not mask[40:].any()
+    again = svc.admit_batch(items)
+    assert not again.any()  # everything is now a duplicate
+    h = svc.router.hash_batch(items)[:, 0]
+    expect = reduce_range((h >> np.uint64(32)).astype(np.uint32), 4)
+    np.testing.assert_array_equal(svc.owner_shards(items), expect)
+
+
+def test_l1_front_absorbs_repeats_without_l2_calls():
+    svc, _ = _service()
+    items = _items(20, seed=2)
+    svc.admit_batch(items)
+    l2_before = svc.stats["l2_calls"]
+    mask = svc.admit_batch(items)
+    assert not mask.any()
+    assert svc.stats["l2_calls"] == l2_before  # all L1 hits, zero round-trips
+    assert svc.last_info["l1_hit"].all()
+
+
+def test_contains_batch_is_read_only():
+    svc, backends = _service()
+    items = _items(8, seed=3)
+    assert not svc.contains_batch(items).any()
+    assert all(b.filt.bits.sum() == 0 for b in backends)  # nothing inserted
+    svc.admit_batch(items)
+    assert svc.contains_batch(items).all()
+
+
+# -- faults: retry / idempotency / integrity ---------------------------------
+
+def test_corrupt_reply_is_retried_not_trusted():
+    plan = FaultPlan(5, events=[FaultEvent("corrupt", shard=s, at=0)
+                                for s in range(4)])
+    svc, _ = _service(faults=plan)
+    items = _items(12, seed=4)
+    mask = svc.admit_batch(items)
+    assert mask.all()  # the retry (same req_id) got the cached true verdict
+    assert svc.stats["corrupt_replies"] >= 1
+    assert svc.stats["retries"] >= 1
+    assert not svc.degraded
+
+
+def test_dropped_reply_retry_returns_original_verdict():
+    # the drop executes the backend THEN loses the reply: without the
+    # req_id reply cache the retry would re-run check_and_add and flip
+    # every first occurrence into a "duplicate"
+    plan = FaultPlan(6, events=[FaultEvent("drop", shard=s, at=0)
+                                for s in range(4)])
+    svc, backends = _service(faults=plan)
+    items = _items(12, seed=4)
+    mask = svc.admit_batch(items)
+    assert mask.all()
+    assert sum(b.calls["replayed"] for b in backends) >= 1
+
+
+def test_timeout_burns_deadline_then_retries():
+    plan = FaultPlan(7, events=[FaultEvent("timeout", shard=s, at=0)
+                                for s in range(4)])
+    svc, _ = _service(faults=plan)
+    t0 = svc.clock.now()
+    mask = svc.admit_batch(_items(12, seed=4))
+    assert mask.all()
+    assert svc.stats["timeouts"] >= 1
+    assert svc.clock.now() >= t0 + svc.retry.deadline_s  # deadline was paid
+
+
+def test_breaker_opens_then_fast_fails():
+    plan = FaultPlan(8, events=[FaultEvent("crash", shard=0, at=0)])
+    svc, _ = _service(faults=plan, policy="fail_open")
+    items = _items(60, seed=5)
+    svc.admit_batch(items)
+    assert svc.breakers[0].state == "open"
+    assert svc.degraded
+    assert svc.stats["breaker_opens"] >= 1
+    # further batches to shard 0 fail fast without transport attempts
+    before = svc.stats["unavailable"]
+    svc.admit_batch(_items(60, seed=6))
+    assert svc.stats["fast_fails"] >= 1
+    assert svc.stats["unavailable"] == before
+
+
+# -- degradation policies ----------------------------------------------------
+
+def test_fail_open_admits_l1_misses_fail_closed_rejects():
+    items = _items(40, seed=7)
+    down = [FaultEvent("crash", shard=s, at=0) for s in range(4)]
+    svc_o, _ = _service(faults=FaultPlan(9, events=down), policy="fail_open")
+    svc_c, _ = _service(faults=FaultPlan(9, events=down), policy="fail_closed")
+    assert svc_o.admit_batch(items).all()       # availability: all admitted
+    assert not svc_c.admit_batch(items).any()   # exactness: all rejected
+    assert svc_o.stats["l1_only_admits"] > 0
+    assert svc_c.stats["l1_only_admits"] == 0
+    # both absorbed the items into L1: repeats are rejected EVERYWHERE
+    assert not svc_o.admit_batch(items).any()
+    assert not svc_c.admit_batch(items).any()
+
+
+def test_recovery_reconciles_and_converges():
+    items = _items(80, seed=8)
+
+    def run(faulty):
+        plan = (FaultPlan(3, events=[FaultEvent("crash", shard=1, at=0,
+                                                until=6)])
+                if faulty else None)
+        svc, backends = _service(faults=plan, policy="fail_open")
+        masks = [svc.admit_batch(items[i:i + 16]) for i in range(0, 80, 16)]
+        return svc, backends, np.concatenate(masks)
+
+    svc_h, bk_h, m_h = run(False)
+    svc_f, bk_f, m_f = run(True)
+    np.testing.assert_array_equal(m_h, m_f)  # fail_open: decisions identical
+    assert svc_f.degraded
+    assert svc_f.reconcile_all()             # probes close the breaker...
+    assert not svc_f.degraded
+    assert svc_f.stats["reconciled_items"] > 0
+    for h, f in zip(bk_h, bk_f):             # ...and the journal replay
+        np.testing.assert_array_equal(h.filt.bits, f.filt.bits)
+    # post-recovery decisions are bit-identical to the fault-free service
+    np.testing.assert_array_equal(svc_h.admit_batch(items),
+                                  svc_f.admit_batch(items))
+
+
+def test_run_is_deterministic_given_plan_seed():
+    def run():
+        plan = FaultPlan(13, events=[FaultEvent("crash", shard=2, at=0,
+                                                until=4)],
+                         p_timeout=0.1, p_corrupt=0.1)
+        svc, _ = _service(faults=plan)
+        mask = svc.admit_batch(_items(64, seed=9))
+        return mask, svc.events, [b.transitions for b in svc.breakers]
+
+    m1, e1, t1 = run()
+    m2, e2, t2 = run()
+    np.testing.assert_array_equal(m1, m2)
+    assert e1 == e2 and t1 == t2
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        AdmissionService(InProcessTransport([]), policy="fail_open")
+    backends = bloom_shard_backends(1, 64)
+    with pytest.raises(ValueError):
+        AdmissionService(InProcessTransport(backends), policy="shrug")
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+def test_pipeline_dedup_via_admission_service():
+    from repro.data.pipeline import HashPipeline, PipelineConfig
+
+    docs = _items(30, seed=10, lo=5, hi=20)
+    cfg = PipelineConfig(seq_len=16, batch_size=2, eval_pct=0, n_shards=1)
+    local = HashPipeline(cfg)
+    svc, _ = _service(n_shards=2)
+    remote = HashPipeline(cfg, admission=svc)
+    routes_l = local.admit_batch(docs + docs[:5])
+    routes_r = remote.admit_batch(docs + docs[:5])
+    assert routes_l == routes_r  # same verdicts, different dedup authority
+    assert remote.stats["dup"] == 5
+    assert svc.stats["rejected"] == 5
+    # streaming admit agrees with the batch path
+    assert remote.admit(docs[0]) == "dup"

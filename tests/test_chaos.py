@@ -1,0 +1,212 @@
+"""Chaos lane: degraded-mode invariants under a FIXED SEED MATRIX of fault
+plans, plus the end-to-end serve acceptance scenario (a shard killed mid-
+stream). Everything runs on the virtual clock -- a full sweep injects
+hundreds of faults with zero real sleeping -- and every run is a pure
+function of (plan seed, workload seed), so failures replay exactly.
+
+The three invariants (ISSUE 6, satellite 4):
+  (a) fail_closed NEVER admits an item the healthy service would reject;
+  (b) L1-hit decisions are bit-identical to the healthy path;
+  (c) after recovery + reconciliation the sharded filter state converges to
+      the fault-free run's state, and subsequent decisions are identical.
+"""
+import numpy as np
+import pytest
+
+from repro.hash import (AdmissionService, FaultEvent, FaultPlan,
+                        FaultyTransport, InProcessTransport, VirtualClock,
+                        bloom_shard_backends)
+
+pytestmark = [pytest.mark.slow, pytest.mark.chaos]
+
+N_SHARDS = 4
+SEED_MATRIX = [3, 7, 11, 19, 23]
+
+
+def _workload(seed, n=96, dup_every=3):
+    """Token rows with deliberate duplicates sprinkled in."""
+    rng = np.random.default_rng(seed)
+    rows = [rng.integers(0, 2000, rng.integers(3, 14), dtype=np.uint32)
+            for _ in range(n)]
+    for i in range(dup_every, n, dup_every):
+        rows[i] = rows[i - dup_every].copy()
+    return rows
+
+
+def _plan(seed):
+    """Scheduled crash window on one shard + background random faults."""
+    return FaultPlan(
+        seed,
+        events=[FaultEvent("crash", shard=seed % N_SHARDS, at=0, until=5)],
+        p_timeout=0.05, p_drop=0.05, p_corrupt=0.05, p_latency=0.05)
+
+
+def _run(policy, plan, wl_seed):
+    backends = bloom_shard_backends(N_SHARDS, 8192)
+    clock = VirtualClock()
+    transport = InProcessTransport(backends)
+    if plan is not None:
+        transport = FaultyTransport(transport, plan, clock)
+    svc = AdmissionService(transport, clock=clock, policy=policy)
+    rows = _workload(wl_seed)
+    masks, l1_hits = [], []
+    for i in range(0, len(rows), 16):
+        masks.append(svc.admit_batch(rows[i:i + 16]))
+        l1_hits.append(svc.last_info["l1_hit"].copy())
+    return svc, backends, masks, l1_hits
+
+
+@pytest.mark.parametrize("seed", SEED_MATRIX)
+def test_invariants_under_fault_matrix(seed):
+    plan = _plan(seed)
+    svc_h, bk_h, m_h, _ = _run("fail_open", None, wl_seed=seed)
+    svc_c, _, m_c, hits_c = _run("fail_closed", _plan(seed), wl_seed=seed)
+    svc_o, bk_o, m_o, hits_o = _run("fail_open", _plan(seed), wl_seed=seed)
+
+    for mh, mc, mo, hc, ho in zip(m_h, m_c, m_o, hits_c, hits_o):
+        # (a) fail_closed admits are a SUBSET of healthy admits
+        assert not np.any(mc & ~mh), "fail_closed admitted a healthy reject"
+        # (b) L1-hit decisions are bit-identical to the healthy path
+        np.testing.assert_array_equal(mc[hc], mh[hc])
+        np.testing.assert_array_equal(mo[ho], mh[ho])
+
+    # (c) recovery: reconciliation converges the filter state to the
+    # fault-free run's, and post-recovery decisions are bit-identical
+    assert svc_o.reconcile_all(rounds=32), "recovery did not quiesce"
+    assert not svc_o.degraded
+    for h, o in zip(bk_h, bk_o):
+        np.testing.assert_array_equal(h.filt.bits, o.filt.bits)
+    probe = _workload(seed + 1000, n=32)
+    np.testing.assert_array_equal(svc_h.admit_batch(probe),
+                                  svc_o.admit_batch(probe))
+
+
+@pytest.mark.parametrize("seed", SEED_MATRIX)
+def test_runs_replay_bit_identically(seed):
+    """Same plan seed -> identical masks, event logs, breaker transitions,
+    backoff schedule, and injected-fault audit trail."""
+    def once():
+        svc, _, masks, _ = _run("fail_open", _plan(seed), wl_seed=seed)
+        return (np.concatenate(masks), tuple(svc.events),
+                tuple(tuple(b.transitions) for b in svc.breakers),
+                tuple(svc.transport.injected))
+
+    m1, e1, t1, i1 = once()
+    m2, e2, t2, i2 = once()
+    np.testing.assert_array_equal(m1, m2)
+    assert e1 == e2 and t1 == t2 and i1 == i2
+
+
+def test_fail_closed_never_admits_seen_item_even_mid_outage():
+    """Sharper form of (a): an item the HEALTHY service admitted earlier is
+    never re-admitted by a degraded fail_closed service, no matter which
+    shards are down (the L1 front has no false negatives)."""
+    rows = _workload(5, n=48, dup_every=48)  # all distinct
+    backends = bloom_shard_backends(N_SHARDS, 8192)
+    clock = VirtualClock()
+    plan = FaultPlan(5, events=[FaultEvent("crash", shard=s, at=4)
+                                for s in range(N_SHARDS)])
+    svc = AdmissionService(FaultyTransport(InProcessTransport(backends),
+                                           plan, clock),
+                           clock=clock, policy="fail_closed")
+    first = svc.admit_batch(rows)  # healthy enough: shards up for 4 calls
+    replay = svc.admit_batch(rows)  # total outage by now
+    assert not replay.any()
+    assert not np.any(replay & ~first)
+
+
+def test_serve_engine_survives_shard_kill_mid_stream():
+    """THE acceptance scenario: 4 shard backends, a FaultPlan kills one
+    mid-stream. submit_all completes every request (no hang, no exception
+    escape), reports degraded stats, and after recovery + reconciliation
+    admission decisions are bit-identical to a fault-free engine."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_config("mistral_nemo_12b", smoke=True)
+    api = build(cfg)
+    params = api.init(jax.random.key(0))
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(6)]
+
+    def reqs():
+        return [Request(i, prompts[i % 6].copy(), max_new_tokens=3)
+                for i in range(10)]  # 6 unique prompts, 4 resubmissions
+
+    # kill the shard that owns the most prompts, so the crash window (its
+    # calls 1..5) lands on real mid-stream traffic whatever the routing
+    probe = AdmissionService(
+        InProcessTransport(bloom_shard_backends(N_SHARDS, 4096)),
+        clock=VirtualClock())
+    owners = probe.owner_shards([p.astype(np.uint32) for p in prompts])
+    victim = int(np.bincount(owners, minlength=N_SHARDS).argmax())
+    assert np.sum(owners == victim) >= 2  # precondition: traffic to kill
+
+    def make(faulty):
+        backends = bloom_shard_backends(N_SHARDS, 4096)
+        clock = VirtualClock()
+        transport = InProcessTransport(backends)
+        if faulty:
+            # the victim dies partway into the stream and stays down for a
+            # window of its call sequence (probes eventually get through)
+            plan = FaultPlan(17, events=[FaultEvent("crash", shard=victim,
+                                                    at=1, until=6)])
+            transport = FaultyTransport(transport, plan, clock)
+        svc = AdmissionService(transport, clock=clock, policy="fail_open")
+        eng = ServeEngine(api, params, n_slots=2, max_seq=64, admission=svc)
+        return eng, svc, backends
+
+    eng_h, svc_h, bk_h = make(False)
+    eng_f, svc_f, bk_f = make(True)
+    done_h = eng_h.submit_all(reqs())
+    done_f = eng_f.submit_all(reqs())  # must not hang or raise
+
+    assert all(r.done for r in done_f)
+    for rh, rf in zip(done_h, done_f):  # fail_open: same verdicts + tokens
+        assert rh.admitted == rf.admitted
+        assert rh.out_tokens == rf.out_tokens
+    assert eng_f.stats["admission_errors"] == 0  # service absorbed it all
+    assert svc_f.stats["breaker_opens"] >= 1
+
+    # recovery: reconcile, then the two services decide identically and
+    # their sharded filter state is bit-equal
+    assert svc_f.reconcile_all(rounds=32)
+    assert not svc_f.degraded
+    for h, f in zip(bk_h, bk_f):
+        np.testing.assert_array_equal(h.filt.bits, f.filt.bits)
+    fresh = [np.arange(5, dtype=np.uint32) + k for k in range(12)]
+    np.testing.assert_array_equal(svc_h.admit_batch(fresh),
+                                  svc_f.admit_batch(fresh))
+
+
+def test_degraded_ticks_surface_in_engine_stats():
+    """While the admission backends are down the engine keeps serving and
+    counts the degraded ticks (fail_open: availability over exactness)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_config("mistral_nemo_12b", smoke=True)
+    api = build(cfg)
+    params = api.init(jax.random.key(0))
+    backends = bloom_shard_backends(2, 1024)
+    clock = VirtualClock()
+    plan = FaultPlan(21, events=[FaultEvent("crash", shard=s, at=0)
+                                 for s in range(2)])  # total, permanent
+    svc = AdmissionService(FaultyTransport(InProcessTransport(backends),
+                                           plan, clock),
+                           clock=clock, policy="fail_open")
+    eng = ServeEngine(api, params, n_slots=2, max_seq=64, admission=svc)
+    rng = np.random.default_rng(4)
+    rqs = [Request(i, rng.integers(0, cfg.vocab_size, size=6).astype(np.int32),
+                   max_new_tokens=3) for i in range(4)]
+    eng.submit_all(rqs)
+    assert all(r.done and r.admitted for r in rqs)  # served L1-only
+    assert eng.stats["degraded_ticks"] > 0
+    assert eng.stats["l1_only_admits"] == svc.stats["l1_only_admits"] > 0

@@ -1,14 +1,16 @@
 """Checkpointer: roundtrip, integrity (corruption detection), keep-k,
-latest-valid resume, bfloat16 handling."""
+latest-valid resume, bfloat16 handling, torn-save crash recovery, typed
+corruption errors, and the verify cache."""
 import json
 import os
+import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import Checkpointer
+from repro.checkpoint import Checkpointer, CorruptCheckpointError
 
 
 def _state(seed=0):
@@ -71,3 +73,91 @@ def test_restore_wrong_structure_fails(tmp_path):
     ck.save(1, _state())
     with pytest.raises(KeyError):
         ck.restore(1, {"different": jnp.zeros(3)})
+
+
+def test_crash_at_commit_keeps_old_checkpoint(tmp_path, monkeypatch):
+    """Simulated node failure at the tmp->final rename: the PREVIOUS
+    version of the step must survive (the old save flow deleted it before
+    committing -- a crash in that window lost both)."""
+    ck = Checkpointer(str(tmp_path))
+    st_old = _state(1)
+    ck.save(3, st_old)
+    real_rename = os.rename
+
+    def crashing_rename(src, dst):
+        if str(src).endswith(".tmp"):
+            raise OSError("simulated crash at commit")
+        return real_rename(src, dst)
+
+    with monkeypatch.context() as m:
+        m.setattr(os, "rename", crashing_rename)
+        with pytest.raises(OSError, match="simulated crash"):
+            ck.save(3, _state(2))
+    # a fresh process opens the directory: recovery sweeps the debris
+    ck2 = Checkpointer(str(tmp_path))
+    assert ck2.steps() == [3]
+    assert ck2.verify(3)
+    assert not any(n.endswith((".tmp", ".old"))
+                   for n in os.listdir(str(tmp_path)))
+    out = ck2.restore(3, jax.tree.map(lambda x: jnp.zeros_like(x), st_old))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(st_old["params"]["w"]))
+
+
+def test_crash_after_commit_sweeps_old_debris(tmp_path):
+    """Crash AFTER the commit rename but before the .old delete: the new
+    checkpoint wins and the stale copy is swept on next open."""
+    ck = Checkpointer(str(tmp_path))
+    st = _state(4)
+    ck.save(2, st)
+    src = os.path.join(str(tmp_path), "step_2")
+    shutil.copytree(src, src + ".old")  # fabricate the mid-crash layout
+    ck2 = Checkpointer(str(tmp_path))
+    assert ck2.steps() == [2]
+    assert not os.path.exists(src + ".old")
+    out = ck2.restore(2, jax.tree.map(lambda x: jnp.zeros_like(x), st))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+
+
+def test_restore_corrupt_raises_typed_error(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state()
+    ck.save(1, st)
+    man_path = os.path.join(str(tmp_path), "step_1", "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    leaf = next(iter(man["leaves"]))
+    man["leaves"][leaf]["fingerprint"] = "0" * 16
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(CorruptCheckpointError, match="fingerprint mismatch"):
+        ck.restore(1, jax.tree.map(lambda x: jnp.zeros_like(x), st))
+
+
+def test_verify_cache_skips_refingerprint(tmp_path, monkeypatch):
+    from repro.checkpoint import checkpointer as ckpt_mod
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1))
+    ck.save(2, _state(2))
+    calls = {"n": 0}
+    real_fp = ckpt_mod.fingerprint_bytes
+
+    def counting_fp(raw):
+        calls["n"] += 1
+        return real_fp(raw)
+
+    monkeypatch.setattr(ckpt_mod, "fingerprint_bytes", counting_fp)
+    assert ck.latest_valid() == 2
+    first = calls["n"]
+    assert first > 0
+    assert ck.latest_valid() == 2
+    assert calls["n"] == first  # cache hit: a stat, not a re-fingerprint
+    # an on-disk change invalidates the cached verdict
+    path = os.path.join(str(tmp_path), "step_2", "arrays.npz")
+    data = bytearray(open(path, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    assert ck.latest_valid() == 1
+    assert calls["n"] > first

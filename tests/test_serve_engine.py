@@ -44,6 +44,66 @@ def test_prefix_cache_hits(engine):
     assert reqs[0].out_tokens == reqs[1].out_tokens
 
 
+def test_overlong_prompt_rejected_before_any_state_change(engine):
+    api, params = engine
+    eng = ServeEngine(api, params, n_slots=2, max_seq=16)
+    good = Request(0, np.arange(4, dtype=np.int32))
+    bad = Request(1, np.arange(16, dtype=np.int32))  # == max_seq: no budget
+    with pytest.raises(ValueError, match="prompt length 16 >= max_seq 16"):
+        eng.submit_all([good, bad])
+    # validation ran BEFORE anything was touched: clean engine, clean retry
+    assert eng._pending_keys is None and eng._req_key_cache == {}
+    assert eng.stats["prefills"] == 0 and not good.done
+    eng.submit_all([good])
+    assert good.done
+
+
+def test_failed_submit_does_not_leak_fingerprint_state(engine, monkeypatch):
+    api, params = engine
+    eng = ServeEngine(api, params, n_slots=2, max_seq=64)
+    reqs = [Request(i, np.arange(6, dtype=np.int32) + i) for i in range(4)]
+
+    def boom(req, slot):
+        raise RuntimeError("prefill OOM (simulated)")
+
+    monkeypatch.setattr(eng, "_assign", boom)
+    with pytest.raises(RuntimeError, match="prefill OOM"):
+        eng.submit_all(reqs)
+    # the in-flight key launch and this submission's cached keys are gone
+    assert eng._pending_keys is None
+    assert eng._req_key_cache == {}
+    monkeypatch.undo()
+    eng.submit_all(reqs)  # the retry starts clean and completes
+    assert all(r.done for r in reqs)
+    assert eng._req_key_cache == {}
+
+
+def test_admission_front_door_rejects_duplicates(engine):
+    from repro.hash import (AdmissionService, InProcessTransport,
+                            VirtualClock, bloom_shard_backends)
+
+    api, params = engine
+    svc = AdmissionService(
+        InProcessTransport(bloom_shard_backends(2, 1024)),
+        clock=VirtualClock())
+    eng = ServeEngine(api, params, n_slots=2, max_seq=64, admission=svc)
+    rng = np.random.default_rng(3)
+    uniq = [rng.integers(0, CFG.vocab_size, size=8).astype(np.int32)
+            for _ in range(3)]
+    reqs = [Request(i, uniq[i % 3].copy(), max_new_tokens=4)
+            for i in range(6)]  # 3 unique prompts, each submitted twice
+    eng.submit_all(reqs)
+    assert all(r.done for r in reqs)
+    admitted = [r for r in reqs if r.admitted]
+    rejected = [r for r in reqs if r.admitted is False]
+    assert len(admitted) == 3 and len(rejected) == 3
+    assert all(len(r.out_tokens) == 4 for r in admitted)
+    assert all(r.out_tokens == [] for r in rejected)  # never decoded
+    assert eng.stats["admission_rejects"] == 3
+    assert eng.stats["prefills"] == 3  # duplicates never cost a prefill
+    assert eng.stats["degraded_ticks"] == 0
+
+
 @pytest.mark.slow  # model decode math, not engine/hash behaviour: full lane
 def test_greedy_matches_manual_decode(engine):
     """Engine output == manual prefill+decode loop for a single request."""
