@@ -18,28 +18,40 @@ REF_HZ = 940e6
 FAST = False
 
 
-def timeit(fn, *args, repeats=5, inner=3, warmup=2):
-    """Best-of-repeats wall time (seconds) for fn(*args), jax-aware."""
+def timeit(fn, *args, repeats=5, inner=3, warmup=2, return_samples=False):
+    """Best-of-repeats wall time (seconds) for fn(*args), jax-aware.
+
+    return_samples=True also returns the per-repeat samples in MICROSECONDS
+    (the `samples_us` bench-row field): the regression gate's permutation
+    test needs the raw timing distribution, not just the best-of summary.
+    """
     for _ in range(warmup):
         r = fn(*args)
         jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(
             r, jax.Array) else None
-    best = float("inf")
+    samples = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         for _ in range(inner):
             r = fn(*args)
         if isinstance(r, jax.Array):
             jax.block_until_ready(r)
-        best = min(best, (time.perf_counter() - t0) / inner)
+        samples.append((time.perf_counter() - t0) / inner)
+    best = min(samples)
+    if return_samples:
+        return best, [round(s * 1e6, 3) for s in samples]
     return best
 
 
-def row(name: str, us_per_call: float, derived: str = "", n_bytes: int | None = None):
+def row(name: str, us_per_call: float, derived: str = "",
+        n_bytes: int | None = None, samples_us: list | None = None):
     """Emit one CSV row and collect the machine-readable JSON twin.
 
     n_bytes (input bytes hashed per call) unlocks the throughput fields:
-    bytes_per_s and cycles_per_byte_equiv (at REF_HZ).
+    bytes_per_s and cycles_per_byte_equiv (at REF_HZ). samples_us (the
+    per-repeat timings from `timeit(..., return_samples=True)`) is REQUIRED
+    for rows under the blocking regression gate: check_regression's paired
+    permutation test fails closed without a sample distribution to test.
     """
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}")
@@ -54,6 +66,8 @@ def row(name: str, us_per_call: float, derived: str = "", n_bytes: int | None = 
         secs = us_per_call * 1e-6
         entry["bytes_per_s"] = round(n_bytes / secs, 1)
         entry["cycles_per_byte_equiv"] = round(secs * REF_HZ / n_bytes, 4)
+    if samples_us is not None:
+        entry["samples_us"] = list(samples_us)
     JSON_ROWS.append(entry)
 
 

@@ -29,7 +29,10 @@ def run():
     rng = np.random.Generator(np.random.Philox(key=np.uint64(0x0B7EC7)))
     toks = rng.integers(0, 2**32, size=(B, L), dtype=np.uint64).astype(np.uint32)
     n_bytes = B * L * 4
-    reps = 1 if fast else 3
+
+    # every hasher_overhead/ row is under the blocking regression gate:
+    # more repeats + recorded samples feed the gate's permutation test
+    reps_gated = 1 if fast else 7
 
     mkb = MultiKeyBuffer(seed=0x0B7, n_hashes=K)
     spec = HashSpec(family="multilinear", n_hashes=K, out_bits=32,
@@ -42,23 +45,26 @@ def run():
             return cops.hash_tokens_device_multi(
                 toks, keys=mkb, family="multilinear", backend="jnp")
 
-    t_legacy = timeit(legacy, repeats=reps, inner=1, warmup=1)
+    t_legacy, s_legacy = timeit(legacy, repeats=reps_gated, inner=1, warmup=1,
+                                return_samples=True)
     row(f"hasher_overhead/B{B}xK{K}/legacy-free-fn", t_legacy * 1e6,
-        "deprecated core.ops shim path", n_bytes=n_bytes)
+        "deprecated core.ops shim path", n_bytes=n_bytes, samples_us=s_legacy)
 
-    t_obj = timeit(lambda: hasher.hash_batch(toks, backend="jnp"),
-                   repeats=reps, inner=1, warmup=1)
+    t_obj, s_obj = timeit(lambda: hasher.hash_batch(toks, backend="jnp"),
+                          repeats=reps_gated, inner=1, warmup=1,
+                          return_samples=True)
     row(f"hasher_overhead/B{B}xK{K}/hash_batch", t_obj * 1e6,
         f"object API; x{t_obj / t_legacy:.2f} of legacy (must be ~1)",
-        n_bytes=n_bytes)
+        n_bytes=n_bytes, samples_us=s_obj)
 
     # the jit-native surface the free functions never had: Hasher as a
     # pytree operand of a jitted step, tokens stay on device
     toks_dev = jnp.asarray(toks)
     pure = jax.jit(lambda hs, t: hs(t))
     jax.block_until_ready(pure(hasher, toks_dev))  # compile outside timing
-    t_pure = timeit(lambda: pure(hasher, toks_dev),
-                    repeats=reps, inner=1, warmup=1)
+    t_pure, s_pure = timeit(lambda: pure(hasher, toks_dev),
+                            repeats=reps_gated, inner=1, warmup=1,
+                            return_samples=True)
     row(f"hasher_overhead/B{B}xK{K}/pure-jit-call", t_pure * 1e6,
         f"in-graph __call__; x{t_pure / t_legacy:.2f} of legacy",
-        n_bytes=n_bytes)
+        n_bytes=n_bytes, samples_us=s_pure)

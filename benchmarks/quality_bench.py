@@ -1,0 +1,37 @@
+"""Quality-battery throughput bench: per-row-keyed family evaluation rate.
+
+The battery (repro.quality) hashes every sample row under its OWN fresh key
+words -- a heavier memory profile than the engine's broadcast-key fast path
+(keys are (B, M) planes, not (M,) vectors) -- so this row tracks what a
+multi-million-key battery run costs and keeps the quality lane's runtime
+budget honest as families are added.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import common
+from .common import row, timeit
+
+
+def run():
+    fast = common.FAST
+    B = 1 << 13 if fast else 1 << 18
+    n = 4
+
+    from repro.quality import keygen
+    from repro.quality.families import battery_families
+
+    key = keygen.battery_key(keygen.QUALITY_SEED, 0xBE)
+    toks = keygen.token_batch(key, B, n)
+    for fam in battery_families():
+        if fam.known_bad:
+            continue
+        khi, klo = keygen.key_planes(key, B, fam.key_words(n))
+        fn = jax.jit(fam.fn)
+        jax.block_until_ready(fn(toks, khi, klo))  # compile outside timing
+        t = timeit(lambda f=fn, a=khi, b=klo: f(toks, a, b),
+                   repeats=1 if fast else 3, inner=1, warmup=1)
+        row(f"quality/battery_eval/B{B}/{fam.name}", t * 1e6,
+            f"{B / t / 1e6:.1f} Mkeys/s, per-row fresh keys",
+            n_bytes=B * n * 4)

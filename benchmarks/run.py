@@ -15,6 +15,8 @@ cycles/byte-equivalent) so the perf trajectory has a committed baseline.
   distributed -- shard_map scale-out engine vs single-device (live devices;
             see benchmarks/distributed_bench.py --devices N for a forced
             multi-device run emitting BENCH_distributed.json)
+  quality -- per-row-keyed family evaluation rate of the hash-quality
+            battery (repro.quality)
   roofline-- dry-run roofline terms (if results/dryrun exists)
 
 Flags: --fast (CI smoke sizes), --json PATH (default BENCH_kernels.json),
@@ -47,8 +49,8 @@ def main(argv=None) -> None:
     from types import SimpleNamespace
 
     from . import (distributed_bench, gf_variants, hasher_bench,
-                   kernels_bench, multihash_bench, table2_multilinear,
-                   table3_common, table4_nh, wordsize)
+                   kernels_bench, multihash_bench, quality_bench,
+                   table2_multilinear, table3_common, table4_nh, wordsize)
 
     def _roofline_run():
         import os
@@ -70,6 +72,7 @@ def main(argv=None) -> None:
         "multihash": multihash_bench,
         "hasher": hasher_bench,
         "distributed": distributed_bench,
+        "quality": quality_bench,
         "roofline": SimpleNamespace(run=_roofline_run),
     }
     only = [s for s in args.only.split(",") if s]

@@ -127,6 +127,17 @@ def shr64_32(a):
     return a[0]
 
 
+def unpack_bits32(x):
+    """(...,) uint32 -> (..., 32) uint32 bit planes, LSB first.
+
+    plane[..., j] = bit j of x. The avalanche/bit-independence metrics
+    (repro.quality.metrics) and `Hasher.bit_planes` consume this; uint32
+    output (not bool) so counts can be summed without a cast.
+    """
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (_u32(x)[..., None] >> shifts) & np.uint32(1)
+
+
 def u64_to_numpy(a):
     """Debug helper: (hi, lo) -> python-int-compatible numpy uint64."""
     import numpy as np

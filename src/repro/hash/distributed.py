@@ -161,6 +161,37 @@ class ShardedHasher:
             self.hasher, toks_p, lens_p)
         return fn(*args)[:B].reshape(batch_shape)
 
+    def probe_indices(self, tokens, plan, lengths=None):
+        """Sharded twin of `Hasher.probe_indices`: (..., N) tokens ->
+        (..., K) uint32 Bloom probe indices in [0, m), each device reducing
+        its own B/D accumulators through the fused Barrett `mod_m` epilogue
+        (`limbs.mod_u64`, DESIGN.md §2). Bit-identical to the single-device
+        surface -- the reduction is per-row, sharding only changes the
+        schedule. The `ModPlan` is frozen/hashable, so each modulus gets one
+        cached shard_map trace (same policy as `shard_ids`).
+        """
+        if not isinstance(plan, limbs.ModPlan):
+            plan = limbs.ModPlan.for_modulus(plan)
+        key = (plan, lengths is not None)
+        fn = self._ids_fns.get(key)
+        if fn is None:
+            ax = self.axis
+            if key[1]:
+                body = lambda hs, t, l: hs.probe_indices(t, plan, l)  # noqa: E731
+                specs = (P(), P(ax), P(ax))
+            else:
+                body = lambda hs, t: hs.probe_indices(t, plan)  # noqa: E731
+                specs = (P(), P(ax))
+            fn = self._ids_fns[key] = jax.jit(shard_map(
+                body, mesh=self.mesh, in_specs=specs, out_specs=P(ax),
+                check_rep=False))
+        toks = jnp.asarray(tokens)
+        batch_shape, N = toks.shape[:-1], toks.shape[-1]
+        toks_p, lens_p, B = self._pad_rows(toks.reshape((-1, N)), lengths)
+        args = (self.hasher, toks_p) if lens_p is None else (
+            self.hasher, toks_p, lens_p)
+        return fn(*args)[:B].reshape(*batch_shape, self.spec.n_hashes)
+
     # -- host-convenience batched engine --------------------------------------
 
     def hash_batch(self, tokens, *, lengths=None,

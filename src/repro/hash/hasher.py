@@ -232,6 +232,19 @@ class Hasher:
             mod_m=mod_m)
         return out[:B]
 
+    def bit_planes(self, tokens, lengths=None):
+        """(..., N) tokens -> (..., K, 32) uint32 bit planes of the finished
+        32-bit hash(es), LSB first: plane [..., k, j] = bit j of hash k.
+
+        Pure JAX (jit/vmap/shard_map-safe). This is the output surface the
+        quality battery's avalanche / bit-independence metrics consume
+        (repro.quality.metrics) -- works for both out_bits=32 specs and
+        out_bits=64 specs (the finished hash is the hi limb).
+        """
+        out = self(tokens, lengths)
+        h = out if self.spec.out_bits == 32 else out[..., 0]
+        return limbs.unpack_bits32(h)
+
     def shard_ids(self, tokens, n_shards: int, lengths=None):
         """(..., N) tokens -> (...,) int32 shard ids in [0, n_shards).
 

@@ -19,8 +19,50 @@ from ..core.keys import derive_stream_seed
 # free-function API; keyring reuses it so defaults stay bit-compatible.
 DEFAULT_SEED = 0x1E53
 
-#: Families implemented by the engine (kernels/multihash.py + hostref.py).
-FAMILY_NAMES = ("multilinear", "multilinear_2x2", "multilinear_hm")
+@dataclasses.dataclass(frozen=True)
+class FamilyTraits:
+    """Static traits of a shipped hash family, keyed by name in `FAMILIES`.
+
+    engine:   runs on the fused kernel engine (kernels/multihash.py), i.e.
+              constructible as a `HashSpec`/`Hasher`; GF(2) families live in
+              core/gf.py + kernels/gf_multilinear.py and are registered here
+              so correctness tooling (repro.quality) sweeps them too.
+    gf:       carry-less GF(2^32) arithmetic (no 64-bit accumulator).
+    pairwise: HM-style two-characters-per-multiplication pairing (requires
+              even padded length).
+    acc64:    exposes the full mod-2^64 accumulator, i.e. the Barrett
+              `mod_m` probe epilogue (DESIGN.md §2) applies.
+    key_bits: random key width per key word (64 integer / 32 carry-less).
+    """
+
+    engine: bool
+    gf: bool = False
+    pairwise: bool = False
+    acc64: bool = True
+    key_bits: int = 64
+
+
+#: Every shipped family, engine-backed or not. This is the enumeration the
+#: quality battery (repro.quality.runner) sweeps: adding a family here puts
+#: it under the statistical gate.
+FAMILIES: "dict[str, FamilyTraits]" = {
+    "multilinear": FamilyTraits(engine=True),
+    "multilinear_2x2": FamilyTraits(engine=True, pairwise=True),
+    "multilinear_hm": FamilyTraits(engine=True, pairwise=True),
+    "gf_multilinear": FamilyTraits(engine=False, gf=True, acc64=False,
+                                   key_bits=32),
+    "gf_multilinear_hm": FamilyTraits(engine=False, gf=True, pairwise=True,
+                                      acc64=False, key_bits=32),
+}
+
+#: Families implemented by the engine (kernels/multihash.py + hostref.py) --
+#: the valid `HashSpec.family` values, unchanged from before the registry.
+FAMILY_NAMES = tuple(n for n, t in FAMILIES.items() if t.engine)
+
+
+def registered_families() -> "tuple[str, ...]":
+    """All shipped family names (engine + GF), battery-sweep order."""
+    return tuple(FAMILIES)
 
 
 @dataclasses.dataclass(frozen=True)

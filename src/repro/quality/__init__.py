@@ -1,0 +1,25 @@
+"""repro.quality: SMHasher-grade hash-quality battery, in-graph (DESIGN §9).
+
+- `metrics`:  jit-compiled measurement kernels + exact-null threshold math.
+- `keygen`:   counter-based in-graph input/key streams (no host RNG).
+- `families`: per-row-keyed adapters for every registered family, plus the
+              seeded known-bad controls the battery must flag.
+- `runner`:   the `QualityReport` sweep and the committed QUALITY.json
+              emit/check CLI (`python -m repro.quality.runner`).
+"""
+from . import families, keygen, metrics, runner
+from .families import BatteryFamily, battery_families
+from .keygen import QUALITY_SEED
+from .runner import compare_reports, run_battery
+
+__all__ = [
+    "BatteryFamily",
+    "QUALITY_SEED",
+    "battery_families",
+    "compare_reports",
+    "families",
+    "keygen",
+    "metrics",
+    "run_battery",
+    "runner",
+]

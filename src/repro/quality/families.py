@@ -1,0 +1,159 @@
+"""Battery adapters: every registered `HashSpec` family, plus seeded
+known-bad controls, as per-row-keyed jnp callables.
+
+The battery's contract (`metrics.avalanche_bic` etc.) is a function
+
+    fn(toks (B, N) u32, key_hi (B, M) u32, key_lo (B, M) u32)
+        -> (hi (B,) u32, lo (B,) u32)
+
+where row b is hashed by its OWN key words (one fresh family member per
+sample -- strong universality is a claim over the key draw), `hi` is the
+finished 32-bit hash, and `(hi, lo)` is the full mod-2^64 accumulator for
+`acc64` families (the Barrett `mod_m` probe path applies to it). GF
+families consume the lo plane only (32-bit carry-less keys) and return a
+zero lo limb.
+
+The adapters re-state each family's defining formula over the SAME
+`core.limbs` / `core.gf` arithmetic the engine uses; tests pin them
+bit-identical to the shipped single-key implementations
+(`core.multilinear.FAMILIES`, `core.gf`) on broadcast keys, so the battery
+provably measures the family the engine ships, not a lookalike.
+
+Known-bad controls (self-validation -- the battery must FLAG both):
+
+- `xor_folklore`: the paper's §4 counterexample family at word scale --
+  XOR (not mod-2^64 sum) of the HM products. XOR lets products cancel
+  instead of mixing: the uniformity chi^2 explodes and the paper's own
+  string pair (0,0,...) vs (2,6,0,...) collides at ~10^-2 instead of 2^-32.
+- `multilinear_trunc16`: MULTILINEAR with positional keys truncated to 16
+  bits (m1 left full width, so plain 1-D uniformity still PASSES -- the
+  control shows marginal chi^2 alone is not enough). Stinson's bound says
+  strong universality needs ~K(n+1) random bits; starving the key material
+  collapses the pair metrics: low input bits shift the accumulator by
+  < 2^47, so high output bits almost never avalanche and near pairs
+  collide with probability ~1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import gf as gf_core
+from ..core import limbs
+from ..core.multilinear import _reduce_sum64
+from ..hash import spec as hash_spec
+
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class BatteryFamily:
+    """One battery entry: a family name, its per-row-keyed callable, and
+    the traits the runner needs to size key material and pick metrics."""
+
+    name: str
+    fn: "object"          # (toks, khi, klo) -> (hi, lo), see module doc
+    key_words: "object"   # n_tokens -> u64 key words per row
+    acc64: bool           # (hi, lo) is the mod-2^64 accumulator
+    known_bad: bool = False
+    engine: bool = False  # constructible as a HashSpec/Hasher
+
+
+def _finish(p_hi, p_lo, m1_hi, m1_lo):
+    hi, lo = _reduce_sum64((p_hi, p_lo), axis=-1)
+    return limbs.add64((hi, lo), (m1_hi, m1_lo))
+
+
+def multilinear(toks, khi, klo):
+    """(m1 + sum m_{i+1} s_i) mod 2^64; keys (B, N+1), m1 at column 0."""
+    p = limbs.mul64_u32((khi[:, 1:], klo[:, 1:]), toks)
+    return _finish(*p, khi[:, 0], klo[:, 0])
+
+
+def multilinear_hm(toks, khi, klo):
+    """(m1 + sum (m_{2i} + s_{2i-1})(m_{2i+1} + s_{2i})) mod 2^64."""
+    a = limbs.add64_u32((khi[:, 1::2], klo[:, 1::2]), toks[:, 0::2])
+    b = limbs.add64_u32((khi[:, 2::2], klo[:, 2::2]), toks[:, 1::2])
+    p = limbs.mul64_low(a, b)
+    return _finish(*p, khi[:, 0], klo[:, 0])
+
+
+def _xor_reduce_rows(x):
+    return jax.lax.reduce(x, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+def gf_multilinear(toks, khi, klo):
+    """GF(2^32) MULTILINEAR: xor-accumulated carry-less products, Barrett-
+    reduced mod p(x) (core.gf). 32-bit keys ride in the lo plane."""
+    del khi
+    p_hi, p_lo = gf_core.clmul32(klo[:, 1:], toks)
+    hi = _xor_reduce_rows(p_hi)
+    lo = _xor_reduce_rows(p_lo) ^ klo[:, 0]
+    h = gf_core.barrett_reduce(hi, lo)
+    return h, jnp.zeros_like(h)
+
+
+def gf_multilinear_hm(toks, khi, klo):
+    """GF(2^32) MULTILINEAR-HM: (m_{2i} ^ s)(m_{2i+1} ^ s') pairing."""
+    del khi
+    a = klo[:, 1::2] ^ toks[:, 0::2]
+    b = klo[:, 2::2] ^ toks[:, 1::2]
+    p_hi, p_lo = gf_core.clmul32(a, b)
+    hi = _xor_reduce_rows(p_hi)
+    lo = _xor_reduce_rows(p_lo) ^ klo[:, 0]
+    h = gf_core.barrett_reduce(hi, lo)
+    return h, jnp.zeros_like(h)
+
+
+def xor_folklore(toks, khi, klo):
+    """KNOWN BAD (paper §4): XOR of (k_{2i}+s_{2i})(k_{2i+1}+s_{2i+1})
+    products -- 32-bit keys (lo plane), 32x32->64 products, xor-accumulated.
+    """
+    del khi
+    a = klo[:, 0::2] + toks[:, 0::2]
+    b = klo[:, 1::2] + toks[:, 1::2]
+    p_hi, p_lo = limbs.mul32_full(a, b)
+    return _xor_reduce_rows(p_hi), _xor_reduce_rows(p_lo)
+
+
+def multilinear_trunc16(toks, khi, klo):
+    """KNOWN BAD: MULTILINEAR with 16-bit positional keys (full-width m1)."""
+    khi = khi.at[:, 1:].set(0)
+    klo = klo.at[:, 1:].set(klo[:, 1:] & np.uint32(0xFFFF))
+    return multilinear(toks, khi, klo)
+
+
+_IMPLS = {
+    # multilinear_2x2 is the same polynomial under a pair-blocked
+    # evaluation order (core.multilinear): identical VALUES, so the battery
+    # evaluates the shared formula -- its report row documents the identity.
+    "multilinear": multilinear,
+    "multilinear_2x2": multilinear,
+    "multilinear_hm": multilinear_hm,
+    "gf_multilinear": gf_multilinear,
+    "gf_multilinear_hm": gf_multilinear_hm,
+}
+
+
+def battery_families() -> "list[BatteryFamily]":
+    """Every registered `HashSpec` family (hash.spec.FAMILIES) followed by
+    the seeded known-bad controls. The registry drives the sweep: adding a
+    family there without an adapter here is a loud KeyError, never a
+    silently-skipped battery entry."""
+    out = []
+    for name in hash_spec.registered_families():
+        traits = hash_spec.FAMILIES[name]
+        out.append(BatteryFamily(
+            name=name, fn=_IMPLS[name],
+            key_words=(lambda n: n + 1),
+            acc64=traits.acc64, engine=traits.engine))
+    out.append(BatteryFamily(
+        name="bad_xor_folklore", fn=xor_folklore,
+        key_words=(lambda n: n), acc64=True, known_bad=True))
+    out.append(BatteryFamily(
+        name="bad_multilinear_trunc16", fn=multilinear_trunc16,
+        key_words=(lambda n: n + 1), acc64=True, known_bad=True))
+    return out

@@ -24,8 +24,15 @@ def test_bench_harness_end_to_end(tmp_path, capsys, monkeypatch):
     rows = {r["name"]: r for r in data["rows"]}
     assert len(rows) >= 5
     for r in rows.values():
-        assert set(r) == {"name", "us_per_call", "derived",
-                          "bytes_per_s", "cycles_per_byte_equiv"}
+        assert set(r) - {"samples_us"} == {"name", "us_per_call", "derived",
+                                           "bytes_per_s",
+                                           "cycles_per_byte_equiv"}
+        # samples, when recorded, are the per-repeat microsecond timings
+        # the regression gate's permutation test consumes
+        if "samples_us" in r:
+            assert r["samples_us"] and all(s > 0 for s in r["samples_us"])
+            assert min(r["samples_us"]) == pytest.approx(r["us_per_call"],
+                                                         abs=0.01)
     # throughput fields populated where n_bytes was known
     timed = [r for r in rows.values() if r["bytes_per_s"]]
     assert timed and all(r["cycles_per_byte_equiv"] > 0 for r in timed)
@@ -62,3 +69,33 @@ def test_committed_baseline_is_current_schema():
         data = json.load(f)
     assert data["schema"] == "bench-v1"
     assert any("multihash" in r["name"] for r in data["rows"])
+    # every row under the blocking perf gate must carry the sample
+    # distribution the permutation test needs -- a samples-free baseline
+    # would make the 1.3x gate fail closed on every PR
+    from benchmarks.check_regression import _GATE_PREFIXES
+
+    gated = [r for r in data["rows"]
+             if r["name"].startswith(tuple(_GATE_PREFIXES))]
+    assert gated, "baseline lost all gated hot-path rows"
+    missing = [r["name"] for r in gated if not r.get("samples_us")]
+    assert not missing, f"gated rows without samples_us: {missing}"
+
+
+def test_regression_gate_permutation_test():
+    """The gate's statistical core: obvious regressions block, matched
+    distributions pass, missing samples fail closed."""
+    from benchmarks.check_regression import gate_verdict, perm_pvalue
+
+    base = {"samples_us": [100.0, 102.0, 98.0, 101.0, 99.0, 103.0, 100.0]}
+    same = {"samples_us": [101.0, 99.0, 100.0, 102.0, 98.0, 103.0, 100.0]}
+    slow = {"samples_us": [s * 1.5 for s in base["samples_us"]]}
+    p, blocked, _ = gate_verdict(base, same, 1.3, 0.01)
+    assert not blocked and p > 0.5
+    p, blocked, _ = gate_verdict(base, slow, 1.3, 0.01)
+    assert blocked and p < 0.001
+    # fail closed on missing samples, either side
+    for b, f in ((dict(base), {}), ({}, dict(base))):
+        p, blocked, why = gate_verdict(b, f, 1.3, 0.01)
+        assert blocked and p is None and "fails closed" in why
+    # p-value is a valid probability and never exactly 0
+    assert 0 < perm_pvalue([1.0] * 5, [2.0] * 5) <= 1

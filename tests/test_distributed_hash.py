@@ -69,6 +69,22 @@ def test_d1_pure_call_and_shard_ids_bit_identical():
     _assert_pure(lambda t: sh.shard_ids(t, 13), toks)
 
 
+def test_d1_probe_indices_bit_identical():
+    """ShardedHasher.probe_indices == Hasher.probe_indices (the fused
+    Barrett mod-m epilogue) at adversarial non-pow2 and pow2 moduli, and
+    stays host-primitive-free."""
+    spec = HashSpec(family="multilinear", n_hashes=3, out_bits=64,
+                    seed=0xD19)
+    h = Hasher.from_spec(spec, max_len=24)
+    sh = h.sharded()
+    toks = jnp.asarray(_toks(7, 17))  # non-multiple of D: pad path
+    for m in (3, 4097, 1024, 2**32 - 1):
+        np.testing.assert_array_equal(
+            np.asarray(sh.probe_indices(toks, m)),
+            np.asarray(h.probe_indices(toks, m)))
+    _assert_pure(lambda t: sh.probe_indices(t, 4097), toks)
+
+
 def test_d1_ragged_and_lengths():
     spec = HashSpec(n_hashes=2, variable_length=True, seed=0xD17)
     h = Hasher.from_spec(spec, max_len=16)

@@ -107,6 +107,62 @@ def test_mod_plan_validation_and_hashability():
     assert mu == (1 << 96) // 0xDEADBEEF + 1
 
 
+@pytest.mark.quality
+@pytest.mark.parametrize("m", [3, 4097, 2**32 - 1])
+def test_probe_indices_uniform_adversarial_moduli(m):
+    """Bucket uniformity of `Hasher.probe_indices` (the fused Barrett mod-m
+    epilogue) at adversarial non-pow2 moduli: tiny odd, 2^12+1, and the
+    largest 32-bit modulus, where a truncation or reciprocal off-by-one
+    would concentrate mass. Fixed-key MULTILINEAR: an odd positional key
+    makes the accumulator uniform over random inputs, so residue counts are
+    multinomial -- judged by the shared quality-battery chi^2 machinery."""
+    from repro.hash import Hasher, HashSpec
+    from repro.quality import metrics
+
+    n = 1 << 16
+    h = Hasher.from_spec(HashSpec(family="multilinear", n_hashes=2,
+                                  out_bits=64, variable_length=False,
+                                  seed=0x60D1), max_len=4)
+    toks = RNG.integers(0, 2**32, size=(n, 4), dtype=np.uint64
+                        ).astype(np.uint32)
+    plan = ModPlan.for_modulus(m)
+    idx = np.asarray(h.probe_indices(jnp.asarray(toks), plan))
+    assert (idx < m).all()
+    for k in range(idx.shape[1]):
+        if m <= metrics.MAX_EXACT_MOD:
+            counts = np.bincount(idx[:, k].astype(np.int64), minlength=m)
+            expected = n / m
+            df = m - 1
+        else:
+            nb = 256
+            bucket = (idx[:, k].astype(np.uint64) * np.uint64(nb)
+                      >> np.uint64(32)).astype(np.int64)
+            counts = np.bincount(bucket, minlength=nb)
+            expected = metrics.mod_bucket_expected(m, nb, n)
+            df = nb - 1
+        chi2 = metrics.chi2_stat(counts, expected)
+        bound = metrics.chi2_bound(df)
+        assert chi2 < bound, f"m={m} k={k}: chi2={chi2} >= {bound}"
+
+
+@pytest.mark.quality
+def test_mod_u64_uniformity_of_uniform_accumulators():
+    """`limbs.mod_u64` of uniform 64-bit accumulators is uniform on [0, m)
+    up to the 2^64 mod m deficiency -- the distributional contract the
+    Bloom probe path (DESIGN.md §2) relies on, checked with the same exact
+    expected-count machinery the quality battery uses."""
+    from repro.quality import metrics
+
+    n = 1 << 16
+    h = _random_h(n)
+    for m in (3, 4097):
+        r = np.asarray(limbs.mod_u64(_split(h), ModPlan.for_modulus(m)))
+        counts = np.bincount(r.astype(np.int64), minlength=m)
+        chi2 = metrics.chi2_stat(counts, n / m)
+        bound = metrics.chi2_bound(m - 1)
+        assert chi2 < bound, f"m={m}: chi2={chi2} >= {bound}"
+
+
 def test_hasher_probe_indices_matches_bloom_formula():
     """Hasher.probe_indices == the single-device BloomFilter `h % m` on the
     very same uint64 accumulators, for non-pow2 and pow2 m."""

@@ -1,0 +1,325 @@
+"""repro.quality battery: threshold math vs known values, adapter
+bit-identity against the shipped engine, self-validation (known-bads
+flagged, shipped families pass), and report drift detection (DESIGN.md §9).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gf as gf_core
+from repro.core import hostref
+from repro.quality import families as qfam
+from repro.quality import keygen, metrics, runner
+
+pytestmark = pytest.mark.quality
+
+RNG = np.random.Generator(np.random.Philox(key=np.uint64(0x0A11)))
+
+
+# ---------------------------------------------------------------------------
+# threshold math against independently known values
+# ---------------------------------------------------------------------------
+
+def test_normal_quantiles_known_values():
+    assert metrics.normal_quantile_sf(0.5) == pytest.approx(0.0, abs=1e-9)
+    # P(Z > 1.6448536) = 0.05, P(Z > 2.3263479) = 0.01
+    assert metrics.normal_quantile_sf(0.05) == pytest.approx(1.6448536, abs=1e-6)
+    assert metrics.normal_quantile_sf(0.01) == pytest.approx(2.3263479, abs=1e-6)
+    for z in (-3.0, -1.0, 0.0, 1.5, 4.0):
+        assert metrics.normal_quantile_sf(metrics.normal_sf(z)) == \
+            pytest.approx(z, abs=1e-9)
+    for bad in (0.0, 1.0, -0.1):
+        with pytest.raises(ValueError):
+            metrics.normal_quantile_sf(bad)
+
+
+def test_chi2_bound_vs_tabulated_quantiles():
+    """Wilson-Hilferty quantiles vs standard chi^2 table values."""
+    # (df, alpha, exact upper quantile)
+    table = [(10, 0.01, 23.209), (10, 0.001, 29.588),
+             (63, 0.01, 92.010), (100, 0.001, 149.449),
+             (4095, 0.01, 4307.5)]
+    for df, alpha, exact in table:
+        got = metrics.chi2_bound(df, alpha)
+        assert got == pytest.approx(exact, rel=0.01), (df, alpha, got)
+
+
+def test_chi2_sigma_centered_and_monotone():
+    # at the mean the z sits near 0 (the chi^2 median is slightly below the
+    # mean, so WH gives a small positive offset that shrinks with df)
+    for df in (5, 63, 4095):
+        assert 0 <= metrics.chi2_sigma(df, df) < 0.3
+        assert metrics.chi2_sigma(3 * df, df) > metrics.chi2_sigma(df, df)
+    # the bound and sigma agree: a statistic AT the bound sits at the
+    # alpha-quantile's z
+    z = metrics.normal_quantile_sf(metrics.ALPHA)
+    assert metrics.chi2_sigma(metrics.chi2_bound(100), 100) == \
+        pytest.approx(z, abs=1e-9)
+    with pytest.raises(ValueError):
+        metrics.chi2_sigma(1.0, 0)
+
+
+def test_binomial_tail_exact_values():
+    # P(X >= 5), X ~ Bin(10, 0.5) = 0.623046875 exactly
+    assert 10 ** metrics.binom_logsf(5, 10, 0.5) == \
+        pytest.approx(0.623046875, rel=1e-9)
+    # P(X >= 10), X ~ Bin(10, 0.5) = 2^-10
+    assert 10 ** metrics.binom_logsf(10, 10, 0.5) == \
+        pytest.approx(2.0 ** -10, rel=1e-9)
+    assert metrics.binom_logsf(0, 10, 0.5) == 0.0
+    assert metrics.binom_logsf(11, 10, 0.5) == -math.inf
+    # collision crit at battery sizes: expected count ~5e-4 -> crit 3
+    assert metrics.binom_crit(1 << 21, 2.0 ** -32) == 3
+    assert metrics.binom_crit(1 << 15, 2.0 ** -32) == 2
+
+
+def test_mod_bucket_expected_exact():
+    nb, total = 64, 1 << 20
+    for m in ((1 << 32) - 1, (1 << 32) - (1 << 20), 1 << 32):
+        e = metrics.mod_bucket_expected(m, nb, total)
+        assert e.shape == (nb,) and e.sum() == pytest.approx(total)
+        # only the LAST bucket is truncated (by the 2^32 - m missing
+        # residues); interior bucket widths differ by at most one residue
+        assert e[:-1].max() - e[:-1].min() <= total / m + 1e-9
+        assert e[-1] >= e.max() - total * ((1 << 32) - m + 1) / m - 1e-9
+    with pytest.raises(ValueError):  # m far below 2^32: empty coarse buckets
+        metrics.mod_bucket_expected(4097, 64, total)
+
+
+def test_sidak_and_sac_bic_bounds_scale():
+    # more cells -> stricter per-cell threshold; more rows -> smaller bound
+    assert metrics.sidak_cell_z(4096) > metrics.sidak_cell_z(64)
+    assert metrics.sac_bound(4096, 1 << 16) < metrics.sac_bound(4096, 1 << 12)
+    assert metrics.bic_bound(63488, 1 << 16) < metrics.bic_bound(63488, 1 << 12)
+    # a fair-coin batch at exactly B/2 has zero deviation
+    assert metrics.sac_deviation(np.full((128, 32), 512), 1024) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# measurement kernels
+# ---------------------------------------------------------------------------
+
+def test_bucket_counts_and_joint_counts_conserve():
+    h = jnp.asarray(RNG.integers(0, 2**32, 4096, dtype=np.uint64)
+                    .astype(np.uint32))
+    c = np.asarray(metrics.bucket_counts(h, 64))
+    assert c.sum() == 4096 and (c >= 0).all()
+    j = np.asarray(metrics.joint_counts(h, h, 8))
+    assert j.sum() == 4096
+    # identical inputs land on the diagonal only
+    assert np.asarray(j).reshape(8, 8).trace() == 4096
+    assert int(metrics.collision_count(h, h)) == 4096
+
+
+def test_avalanche_null_is_fair_coin_for_multilinear():
+    """Per-row fresh keys make every avalanche cell Binomial(B, 1/2): at
+    B=2048 all 4096 cells sit within the Sidak band, and the flip matrix is
+    exactly reproducible from the seed."""
+    b, n = 2048, 1
+    key = keygen.battery_key(7)
+    toks = keygen.token_batch(key, b, n)
+    khi, klo = keygen.key_planes(key, b, n + 1)
+    counts, bic = metrics.avalanche_bic(qfam.multilinear, toks, khi, klo)
+    counts = np.asarray(counts)
+    assert counts.shape == (32 * n, 32)
+    sac = metrics.sac_deviation(counts, b)
+    assert sac <= metrics.sac_bound(counts.size, b)
+    assert float(bic) <= metrics.bic_bound(
+        counts.shape[0] * (32 * 31) // 2, b)
+    counts2, _ = metrics.avalanche_bic(qfam.multilinear, toks, khi, klo)
+    np.testing.assert_array_equal(counts, np.asarray(counts2))
+
+
+# ---------------------------------------------------------------------------
+# adapter bit-identity: the battery measures the family the engine ships
+# ---------------------------------------------------------------------------
+
+def _broadcast_keys(keys_u64, b):
+    hi = jnp.asarray(np.tile((keys_u64 >> 32).astype(np.uint32), (b, 1)))
+    lo = jnp.asarray(np.tile(keys_u64.astype(np.uint32), (b, 1)))
+    return hi, lo
+
+
+def test_multilinear_adapter_matches_hostref():
+    b, n = 64, 6
+    toks = RNG.integers(0, 2**32, (b, n), dtype=np.uint64).astype(np.uint32)
+    keys = RNG.integers(0, 2**64, n + 1, dtype=np.uint64)
+    khi, klo = _broadcast_keys(keys, b)
+    hi, lo = qfam.multilinear(jnp.asarray(toks), khi, klo)
+    np.testing.assert_array_equal(np.asarray(hi),
+                                  hostref.multilinear_np(toks, keys))
+    acc = (np.asarray(hi).astype(np.uint64) << 32) | np.asarray(lo)
+    np.testing.assert_array_equal(acc, hostref.multilinear_np_u64(toks, keys))
+
+
+def test_multilinear_hm_adapter_matches_hostref():
+    b, n = 64, 6
+    toks = RNG.integers(0, 2**32, (b, n), dtype=np.uint64).astype(np.uint32)
+    keys = RNG.integers(0, 2**64, n + 1, dtype=np.uint64)
+    khi, klo = _broadcast_keys(keys, b)
+    hi, _ = qfam.multilinear_hm(jnp.asarray(toks), khi, klo)
+    np.testing.assert_array_equal(np.asarray(hi),
+                                  hostref.multilinear_hm_np(toks, keys))
+
+
+@pytest.mark.parametrize("name,engine_fn", [
+    ("gf_multilinear", gf_core.gf_multilinear),
+    ("gf_multilinear_hm", gf_core.gf_multilinear_hm),
+])
+def test_gf_adapters_match_engine(name, engine_fn):
+    b, n = 64, 6
+    toks = RNG.integers(0, 2**32, (b, n), dtype=np.uint64).astype(np.uint32)
+    keys32 = RNG.integers(0, 2**32, n + 1, dtype=np.uint64).astype(np.uint32)
+    khi = jnp.zeros((b, n + 1), jnp.uint32)
+    klo = jnp.asarray(np.tile(keys32, (b, 1)))
+    hi, lo = getattr(qfam, name)(jnp.asarray(toks), khi, klo)
+    want = np.asarray(engine_fn(jnp.asarray(toks), jnp.asarray(keys32)))
+    np.testing.assert_array_equal(np.asarray(hi), want)
+    assert not np.asarray(lo).any()
+
+
+def test_battery_registry_covers_every_family():
+    """The sweep is registry-driven: every registered family has a battery
+    entry, the known-bad controls ride at the end, and an unregistered
+    adapter would be a loud KeyError (asserted by construction here)."""
+    from repro.hash import spec as hash_spec
+
+    fams = qfam.battery_families()
+    names = [f.name for f in fams]
+    assert names[:len(hash_spec.registered_families())] == \
+        list(hash_spec.registered_families())
+    assert [f.name for f in fams if f.known_bad] == \
+        ["bad_xor_folklore", "bad_multilinear_trunc16"]
+    for f in fams:
+        assert f.key_words(4) in (4, 5)
+
+
+def test_known_bads_are_actually_bad():
+    """The §4 counterexample: xor-folklore collides the paper's string pair
+    (0,0,..) vs (2,6,0,..) at ~1e-2 under random keys, and trunc16 collides
+    near-pairs almost surely -- measured directly, no battery involved."""
+    b, n = 1 << 14, 4
+    key = keygen.battery_key(3)
+    khi, klo = keygen.key_planes(key, b, n)
+    za = jnp.zeros((b, n), jnp.uint32)
+    zb = za.at[:, 0].set(2).at[:, 1].set(6)
+    h1, _ = qfam.xor_folklore(za, khi, klo)
+    h2, _ = qfam.xor_folklore(zb, khi, klo)
+    rate = int(metrics.collision_count(h1, h2)) / b
+    assert 1e-3 < rate < 0.2, rate  # paper: ~4%; ideal would be 2^-32
+    khi5, klo5 = keygen.key_planes(key, b, n + 1)
+    toks = keygen.token_batch(key, b, n)
+    low = toks.at[:, 0].set(toks[:, 0] ^ np.uint32(1))
+    t1, _ = qfam.multilinear_trunc16(toks, khi5, klo5)
+    t2, _ = qfam.multilinear_trunc16(low, khi5, klo5)
+    assert int(metrics.collision_count(t1, t2)) / b > 0.9
+
+
+# ---------------------------------------------------------------------------
+# battery verdicts + report plumbing (small sizes)
+# ---------------------------------------------------------------------------
+
+def _small_battery():
+    return runner.run_battery(n_keys=1 << 13, avalanche_keys=1 << 10,
+                              progress=lambda *_: None)
+
+
+@pytest.fixture(scope="module")
+def small_report():
+    return _small_battery()
+
+
+def test_battery_flags_bads_passes_shipped(small_report):
+    r = small_report
+    assert r["self_validated"] and r["all_shipped_pass"]
+    for name, f in r["families"].items():
+        assert f["passed"] == (not f["known_bad"]), name
+    # trunc16's designed lesson: marginal uniformity PASSES while the pair
+    # metrics fail -- plain chi^2 alone cannot certify strong universality
+    t16 = {m["name"]: m for m in
+           r["families"]["bad_multilinear_trunc16"]["metrics"]}
+    assert t16["uni_random"]["passed"]
+    assert not t16["coll_lowbit"]["passed"]
+    assert not t16["joint_lowbit"]["passed"]
+
+
+def test_probe_path_section(small_report):
+    pp = small_report["probe_path"]
+    assert pp["passed"] and pp["sharded_identical"]
+    assert len(pp["metrics"]) == 2 * 3  # K=2 probes x 3 adversarial moduli
+
+
+def test_report_drift_detection(small_report):
+    fresh = _small_battery()  # same seed + sizes -> identical counts
+    assert runner.compare_reports(small_report, fresh,
+                                  verdicts_only=False) == []
+    import copy
+
+    broken = copy.deepcopy(fresh)
+    m = broken["families"]["multilinear"]["metrics"][0]
+    m["passed"] = False
+    problems = runner.compare_reports(small_report, broken,
+                                      verdicts_only=True)
+    assert problems and "verdict flipped" in problems[0]
+    m["passed"] = True
+    m["value"] = m["value"] + 10.0
+    problems = runner.compare_reports(small_report, broken,
+                                      verdicts_only=False)
+    assert problems and "statistic drifted" in problems[0]
+
+
+def test_committed_quality_json_schema():
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "QUALITY.json")
+    with open(path) as f:
+        data = json.load(f)
+    assert data["schema"] == runner.SCHEMA
+    assert data["n_keys"] == runner.FULL_KEYS
+    assert data["self_validated"] and data["all_shipped_pass"]
+    shipped = [n for n, f in data["families"].items() if not f["known_bad"]]
+    from repro.hash import spec as hash_spec
+
+    assert sorted(shipped) == sorted(hash_spec.registered_families())
+
+
+@pytest.mark.slow
+def test_runner_cli_smoke_round_trip(tmp_path):
+    """End-to-end CLI: a smoke run writes a report whose verdict pattern
+    then verifies against itself AND against the committed QUALITY.json
+    (the PR-lane command), exit code 0."""
+    out = tmp_path / "q.json"
+    assert runner.main(["--smoke", "--out", str(out)]) == 0
+    assert runner.main(["--smoke", "--check-verdicts", str(out)]) == 0
+    assert runner.main(["--smoke", "--check-verdicts", "QUALITY.json"]) == 0
+
+
+def test_bit_planes_helper():
+    from repro.core import limbs
+
+    x = jnp.asarray(np.uint32([0, 1, 0x80000000, 0xFFFFFFFF]))
+    bits = np.asarray(limbs.unpack_bits32(x))
+    assert bits.shape == (4, 32)
+    np.testing.assert_array_equal(bits[0], 0)
+    assert bits[1, 0] == 1 and bits[1, 1:].sum() == 0
+    assert bits[2, 31] == 1 and bits[2, :31].sum() == 0
+    np.testing.assert_array_equal(bits[3], 1)
+
+
+def test_hasher_bit_planes_matches_call():
+    from repro.hash import Hasher, HashSpec
+
+    h = Hasher.from_spec(HashSpec(family="multilinear", n_hashes=2,
+                                  seed=0xB17), max_len=4)
+    toks = jnp.asarray(RNG.integers(0, 2**32, (8, 4), dtype=np.uint64)
+                       .astype(np.uint32))
+    planes = np.asarray(jax.jit(lambda hs, t: hs.bit_planes(t))(h, toks))
+    out = np.asarray(h(toks))
+    assert planes.shape == (8, 2, 32)
+    recon = (planes.astype(np.uint64)
+             << np.arange(32, dtype=np.uint64)).sum(-1)
+    np.testing.assert_array_equal(recon.astype(np.uint32), out)

@@ -1,21 +1,27 @@
-"""Deterministic statistical tests on shard routing (no hypothesis needed)."""
+"""Deterministic statistical tests on shard routing (no hypothesis needed).
+
+Chi^2 statistics and PASS bounds come from the shared `repro.quality.metrics`
+helpers (Wilson-Hilferty quantiles at the battery's alpha), not hand-derived
+mean + k*sigma constants: one place owns the distribution math.
+"""
 import numpy as np
 
 from repro.hash import keyring, reduce_range, shard_assignment, sharding
+from repro.quality import metrics
 
 
 def test_shard_uniformity_chi2():
     """Uniformity (paper §1): chi^2 of shard loads under the strongly
-    universal family stays within 5 sigma for 64k random rows."""
+    universal family stays below the alpha=1e-6 chi^2_{63} quantile for
+    64k random rows."""
     rng = np.random.Generator(np.random.Philox(key=np.uint64(1)))
     rows = rng.integers(0, 2**32, size=(1 << 16, 4), dtype=np.uint64).astype(np.uint32)
     n_shards = 64
     sh = shard_assignment(rows, n_shards=n_shards)
     counts = np.bincount(sh, minlength=n_shards)
-    expected = len(rows) / n_shards
-    chi2 = ((counts - expected) ** 2 / expected).sum()
-    # chi2 ~ chi2_{63}: mean 63, sd sqrt(126) ~ 11.2; 5 sigma ~ 119
-    assert chi2 < 119, f"shard loads too skewed: chi2={chi2}"
+    chi2 = metrics.chi2_stat(counts, len(rows) / n_shards)
+    bound = metrics.chi2_bound(n_shards - 1)
+    assert chi2 < bound, f"shard loads too skewed: chi2={chi2} >= {bound}"
 
 
 def test_lemire_reduction_exact_and_unbiased():
@@ -38,13 +44,13 @@ def test_lemire_chi2_balance_many_shard_counts():
     counts that do NOT divide 2^32 (where modulo bias would concentrate)."""
     rng = np.random.Generator(np.random.Philox(key=np.uint64(7)))
     rows = rng.integers(0, 2**32, size=(1 << 14, 4), dtype=np.uint64).astype(np.uint32)
-    for n_shards, bound in [(3, 30), (7, 35), (48, 100)]:
+    for n_shards in (3, 7, 48):
         sh = shard_assignment(rows, n_shards=n_shards)
         counts = np.bincount(sh, minlength=n_shards)
-        expected = len(rows) / n_shards
-        chi2 = ((counts - expected) ** 2 / expected).sum()
-        # bound ~ mean + 5 * sd of chi2_{n-1}
-        assert chi2 < bound, f"n={n_shards}: chi2={chi2}, counts={counts}"
+        chi2 = metrics.chi2_stat(counts, len(rows) / n_shards)
+        bound = metrics.chi2_bound(n_shards - 1)
+        assert chi2 < bound, (
+            f"n={n_shards}: chi2={chi2} >= {bound}, counts={counts}")
 
 
 def test_shard_determinism_and_salt_sensitivity():
