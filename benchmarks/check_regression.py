@@ -42,7 +42,7 @@ import random
 import sys
 
 # modules with throughput rows that exist at both --fast and full sizes
-_SMOKE_MODULES = "kernels,multihash,hasher,distributed"
+_SMOKE_MODULES = "kernels,multihash,hasher,tree,distributed"
 
 # hot-path rows gated by --max-regress: the COMPUTE-BOUND jit engine fast
 # paths whose regression would invalidate the paper-claim trajectory. The
@@ -51,7 +51,9 @@ _SMOKE_MODULES = "kernels,multihash,hasher,distributed"
 # the non-blocking report. Prefix match.
 _GATE_PREFIXES = ("multihash/kscale/",
                   "multihash/bloom4096x9probe/fused-jnp",
-                  "hasher_overhead/")
+                  "hasher_overhead/",
+                  "tree/leaf_hash/",
+                  "tree/digest/")
 
 
 def perm_pvalue(base_logs: list, fresh_logs: list,

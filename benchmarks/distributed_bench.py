@@ -99,6 +99,44 @@ def _bench_meshes(meshes: "list[tuple[str, object]]") -> None:
                 "in-graph Barrett mod + probe all_gather", n_bytes=n_bytes)
 
 
+def _bench_tree(meshes: "list[tuple[str, object]]") -> None:
+    """Tree-fingerprint D-scaling rows: the fused leaf pass sharded over the
+    'data' axis vs single-device, plus the serial `stream_digest_host` loop
+    the tree path replaces -- the long-input speedup claim lives here
+    (acceptance: sharded leaf hashing >= 2x the serial host baseline)."""
+    from repro.hash import Hasher, HashSpec, stream_digest_host
+    from repro.hash.tree import TreeHasher, TreeSpec
+
+    fast = common.FAST
+    T = 1 << 14 if fast else 1 << 18  # tokens; 1024 leaves at full size
+    lw = 256
+    reps = 1 if fast else 3
+    n_bytes = T * 4
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(0x73EE)))
+    toks = rng.integers(0, 2**32, size=T, dtype=np.uint64).astype(np.uint32)
+
+    want = None
+    for tag, mesh in meshes:
+        th = TreeHasher(TreeSpec(leaf_words=lw), mesh=mesh)
+        fp = th.fingerprint(toks)
+        want = fp if want is None else want
+        assert fp == want, f"digest drift on {tag}: {fp:#x} != {want:#x}"
+        t = timeit(th.fingerprint, toks, repeats=reps, inner=1, warmup=1)
+        row(f"distributed/tree_digest/T{T}/{tag}", t * 1e6,
+            "single-device leaf pass" if mesh is None else
+            f"leaves sharded over {tag}, host fold tail", n_bytes=n_bytes)
+
+    # the pre-tree serial route for the same input: a python host loop
+    h = Hasher.from_spec(HashSpec(family="multilinear", n_hashes=1,
+                                  out_bits=64, seed=0x73EE), max_len=lw)
+    t = timeit(lambda: stream_digest_host(h, toks, lw,
+                                          max_chunks=T // lw + 1),
+               repeats=reps, inner=1, warmup=1)
+    row(f"distributed/tree_digest/T{T}/stream_host_baseline", t * 1e6,
+        "serial two-level host loop (the route tree replaces)",
+        n_bytes=n_bytes)
+
+
 def _bench_service() -> None:
     """p50/p99 admission latency through the fault-tolerant service
     (repro.hash.service), healthy vs under a seeded fault plan. Report-only
@@ -159,6 +197,7 @@ def run() -> None:
     mesh = data_mesh()
     d = mesh.devices.size
     _bench_meshes([("single", None), (f"D{d}", mesh)])
+    _bench_tree([("single", None), (f"D{d}", mesh)])
     _bench_service()
 
 
@@ -170,6 +209,8 @@ def _child(json_path: str) -> None:
     d = full.devices.size
     _bench_meshes([("single", None), ("D1", data_mesh(max_devices=1)),
                    (f"D{d}", full)])
+    _bench_tree([("single", None), ("D1", data_mesh(max_devices=1)),
+                 (f"D{d}", full)])
     _bench_service()
     payload = {"schema": "bench-v1", "ref_hz": common.REF_HZ,
                "fast": common.FAST, "devices": d, "rows": common.JSON_ROWS}

@@ -12,6 +12,8 @@ cycles/byte-equivalent) so the perf trajectory has a committed baseline.
   kernels -- Pallas kernel VMEM/roofline model + interpret sanity
   multihash -- fused K-function engine vs seed host Bloom loop
   hasher  -- Hasher object API vs legacy free functions (overhead ~0)
+  tree    -- tree fingerprints (hash.tree): leaf-launch throughput, fold
+            tail, digest rate vs the serial stream_digest_host baseline
   distributed -- shard_map scale-out engine vs single-device (live devices;
             see benchmarks/distributed_bench.py --devices N for a forced
             multi-device run emitting BENCH_distributed.json)
@@ -50,7 +52,8 @@ def main(argv=None) -> None:
 
     from . import (distributed_bench, gf_variants, hasher_bench,
                    kernels_bench, multihash_bench, quality_bench,
-                   table2_multilinear, table3_common, table4_nh, wordsize)
+                   table2_multilinear, table3_common, table4_nh, tree_bench,
+                   wordsize)
 
     def _roofline_run():
         import os
@@ -71,6 +74,7 @@ def main(argv=None) -> None:
         "kernels": kernels_bench,
         "multihash": multihash_bench,
         "hasher": hasher_bench,
+        "tree": tree_bench,
         "distributed": distributed_bench,
         "quality": quality_bench,
         "roofline": SimpleNamespace(run=_roofline_run),

@@ -1,5 +1,6 @@
-"""Fault-tolerant checkpointing: npz shards + JSON manifest, Multilinear
-fingerprints (the paper's family doing integrity duty), atomic renames,
+"""Fault-tolerant checkpointing: npz shards + JSON manifest, tree
+fingerprints (hash.tree -- the paper's family doing integrity duty, one
+fused leaf launch per array plus a pytree root digest), atomic renames,
 keep-last-k, latest-VALID resume, and elastic resharding on load.
 
 Layout:
@@ -27,6 +28,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..hash import fingerprint_bytes
+from ..hash.tree import default_tree_hasher, root_of_leaf_fingerprints
+
+# Manifest integrity scheme. "tree-v1" checkpoints carry per-leaf TREE
+# digests (hash.tree: one fused leaf launch per array instead of the old
+# serial per-chunk host loop) plus a pytree ROOT digest over (path, leaf_fp)
+# pairs, so a manifest edit that swaps two intact leaves is also caught.
+# Manifests without a "scheme" key are legacy streaming fingerprints and
+# keep verifying bit-for-bit.
+_SCHEME_TREE = "tree-v1"
+_SCHEME_LEGACY = "stream-v0"
+
+
+def _leaf_fingerprint(arr: np.ndarray, scheme: str) -> int:
+    """The integrity fingerprint of one stored array under `scheme` -- the
+    single hashing helper both verify and restore go through."""
+    if scheme == _SCHEME_TREE:
+        return default_tree_hasher().fingerprint_bytes(arr.tobytes())
+    return fingerprint_bytes(arr.tobytes())
 
 
 def _leaf_path(kp) -> str:
@@ -82,7 +101,10 @@ class Checkpointer:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         flat, _ = _flatten(state)
-        arrays, manifest = {}, {"step": step, "time": time.time(), "leaves": {}}
+        arrays = {}
+        manifest = {"step": step, "time": time.time(),
+                    "scheme": _SCHEME_TREE, "leaves": {}}
+        pairs = []
         for i, (path, leaf) in enumerate(flat):
             arr = np.asarray(jax.device_get(leaf))
             if arr.dtype == jnp.bfloat16:
@@ -92,12 +114,15 @@ class Checkpointer:
                 stored_dtype = str(arr.dtype)
             key = f"a{i}"
             arrays[key] = arr
+            fp = _leaf_fingerprint(arr, _SCHEME_TREE)
+            pairs.append((path, fp))
             manifest["leaves"][path] = {
                 "key": key,
                 "shape": list(arr.shape),
                 "dtype": stored_dtype,
-                "fingerprint": f"{fingerprint_bytes(arr.tobytes()):016x}",
+                "fingerprint": f"{fp:016x}",
             }
+        manifest["root"] = f"{root_of_leaf_fingerprints(pairs):016x}"
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -167,11 +192,19 @@ class Checkpointer:
         try:
             with open(os.path.join(path, "manifest.json")) as f:
                 manifest = json.load(f)
+            scheme = manifest.get("scheme", _SCHEME_LEGACY)
             data = np.load(os.path.join(path, "arrays.npz"))
+            pairs = []
             for leaf_path, meta in manifest["leaves"].items():
-                arr = data[meta["key"]]
-                got = f"{fingerprint_bytes(arr.tobytes()):016x}"
-                if got != meta["fingerprint"]:
+                got = _leaf_fingerprint(data[meta["key"]], scheme)
+                if f"{got:016x}" != meta["fingerprint"]:
+                    return False
+                pairs.append((leaf_path, got))
+            if "root" in manifest:
+                # pytree-level check: catches manifest edits that permute
+                # or relabel individually-intact leaves
+                root = root_of_leaf_fingerprints(pairs)
+                if f"{root:016x}" != manifest["root"]:
                     return False
             return True
         except Exception:
@@ -192,6 +225,7 @@ class Checkpointer:
         path = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
+        scheme = manifest.get("scheme", _SCHEME_LEGACY)
         data = np.load(os.path.join(path, "arrays.npz"))
         flat, treedef = jax.tree_util.tree_flatten_with_path(like)
         shardings = None
@@ -207,7 +241,7 @@ class Checkpointer:
             p = _leaf_path(kp)
             meta = manifest["leaves"][p]
             arr = data[meta["key"]]
-            want = fingerprint_bytes(arr.tobytes())
+            want = _leaf_fingerprint(arr, scheme)
             if f"{want:016x}" != meta["fingerprint"]:
                 # a real error, not an assert: survives `python -O` and is
                 # catchable by resume logic (fall back to latest_valid())

@@ -97,3 +97,34 @@ def prop31_solve_constructive(a: int, b: int, c: int, K: int, L: int) -> list[in
 def exact_pairwise_prob(K: int, L: int) -> Fraction:
     """Thm 3.1 target joint probability P(h(s)=y, h(s')=y') = 2^(2(L-K-1))."""
     return Fraction(1, 2 ** (2 * (K - L + 1)))
+
+
+# -- tree composition (hash.tree, DESIGN.md section 10) -----------------------
+
+def tree_eps_level(char_bits: int = 32, acc_bits: int = 64) -> Fraction:
+    """Per-level collision bound of a MULTILINEAR compression mod 2^acc_bits
+    over char_bits-bit characters: two distinct equal-length inputs collide
+    iff sum k_i * d_i = delta (mod 2^acc) for the nonzero difference vector
+    d; fixing all keys but one with d_j != 0, k_j * d_j must hit a fixed
+    residue, which has 2^v solutions for v = trailing_zeros(d_j) <= char_bits
+    - 1.  Hence eps <= 2^(char_bits-1) / 2^acc_bits = 2^-(acc-char+1)."""
+    return Fraction(1, 2 ** (acc_bits - char_bits + 1))
+
+
+def tree_depth(n_leaves: int) -> int:
+    """Fold levels of an n-leaf tree: ceil(log2(n)) pairwise levels."""
+    if n_leaves < 1:
+        raise ValueError("n_leaves must be >= 1")
+    return max(0, (n_leaves - 1).bit_length())
+
+
+def tree_collision_bound(n_leaves: int, char_bits: int = 32,
+                         acc_bits: int = 64) -> Fraction:
+    """Collision bound of the full tree digest on two distinct streams:
+    union bound over the leaf level, the tree_depth(n) fold levels, and the
+    length-tag finalization -- each an independent-key strongly-universal
+    compression, so errors only add (the HalftimeHash composition argument,
+    arXiv 2104.08865):  (depth + 2) * eps_level.  For 64-bit accumulators
+    and 32-bit characters this is (depth + 2) * 2^-33 -- under 2^-27 even
+    at a billion leaves."""
+    return (tree_depth(n_leaves) + 2) * tree_eps_level(char_bits, acc_bits)

@@ -112,7 +112,10 @@ class ExactDedup:
             family="multilinear", n_hashes=1, out_bits=64,
             variable_length=True, seed=seed))
         self.backend = backend
+        self._seed = seed
+        self._mesh = mesh
         self._sharded = self.hasher.sharded(mesh) if mesh is not None else None
+        self._tree = None  # lazy: most corpora never hit the long path
         self.seen: set[int] = set()
 
     def _fingerprints(self, items, backend=None) -> np.ndarray:
@@ -137,9 +140,48 @@ class ExactDedup:
         if len(items) == 0:
             return np.zeros(0, bool)
         fps = self._fingerprints(items)
+        return self._admit(fps)
+
+    def _admit(self, fps) -> np.ndarray:
+        """Arrival-order admission over precomputed fingerprints: first
+        occurrence (within the batch or vs history) wins."""
         out = np.zeros(len(fps), bool)
         for i, fp in enumerate(map(int, fps)):
             if fp not in self.seen:
                 self.seen.add(fp)
                 out[i] = True
         return out
+
+    def _tree_hasher(self):
+        if self._tree is None:
+            from ..hash.tree import TreeHasher, TreeSpec
+
+            self._tree = TreeHasher(TreeSpec(seed=self._seed),
+                                    mesh=self._mesh)
+        return self._tree
+
+    def add_documents(self, docs, *, long_words: int = 1 << 12) -> np.ndarray:
+        """(B,) bool admission mask over documents of ANY length.
+
+        Documents shorter than `long_words` ride the existing one-launch
+        batched fingerprint; documents at or past it get mesh-parallel
+        tree fingerprints (`repro.hash.tree`), so one multi-million-token
+        document no longer forces the bounded batch buffer to pad every
+        row to the longest doc. Routing depends on length alone -- a given
+        document always lands on the same path, so its fingerprint (and
+        hence the dedup verdict) is stable across batch compositions.
+        First occurrence wins, in arrival order.
+        """
+        docs = [np.asarray(d, np.uint32).reshape(-1) for d in docs]
+        if len(docs) == 0:
+            return np.zeros(0, bool)
+        fps = np.zeros(len(docs), np.uint64)
+        short = [i for i, d in enumerate(docs) if len(d) < long_words]
+        if short:
+            fps[short] = self._fingerprints([docs[i] for i in short])
+        if len(short) < len(docs):
+            th = self._tree_hasher()
+            for i, d in enumerate(docs):
+                if len(d) >= long_words:
+                    fps[i] = th.fingerprint(d)
+        return self._admit(fps)

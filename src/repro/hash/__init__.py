@@ -10,10 +10,11 @@ material), jit-native end to end:
 
 Submodules: spec (HashSpec), hasher (Hasher/HashPlan), keyring (bounded-LRU
 deterministic defaults), streaming (two-level incremental fingerprints),
-sharding (Lemire-reduced shard routing). The legacy `core.ops` free
+sharding (Lemire-reduced shard routing), tree (mesh-parallel HalftimeHash-
+style tree fingerprints for long inputs). The legacy `core.ops` free
 functions remain as bit-identical deprecation shims over this package.
 """
-from . import distributed, faults, keyring, service, sharding, streaming  # noqa: F401
+from . import distributed, faults, keyring, service, sharding, streaming, tree  # noqa: F401
 from .distributed import (  # noqa: F401
     DeviceShardedBloom, FilterShardBackend, ShardedHasher,
     bloom_shard_backends)
@@ -25,3 +26,6 @@ from .service import (  # noqa: F401
 from .sharding import reduce_range, shard_assignment  # noqa: F401
 from .spec import DEFAULT_SEED, FAMILY_NAMES, HashSpec  # noqa: F401
 from .streaming import StreamState, fingerprint_bytes, stream_digest_host  # noqa: F401
+from .tree import (  # noqa: F401
+    PytreeFingerprint, TreeHasher, TreeSpec, TreeStream, default_tree_hasher,
+    fingerprint_pytree, root_of_leaf_fingerprints, stream_tree)

@@ -53,6 +53,11 @@ FAMILIES: "dict[str, FamilyTraits]" = {
                                    key_bits=32),
     "gf_multilinear_hm": FamilyTraits(engine=False, gf=True, pairwise=True,
                                       acc64=False, key_bits=32),
+    # hash.tree's composed construction (MULTILINEAR leaves + pairwise
+    # strongly-universal fold). Not a HashSpec family (the TreeHasher wraps
+    # one); registered so the quality battery measures the composition, not
+    # just its ingredients.
+    "tree_multilinear": FamilyTraits(engine=False),
 }
 
 #: Families implemented by the engine (kernels/multihash.py + hostref.py) --

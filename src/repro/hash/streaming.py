@@ -214,12 +214,22 @@ def stream_digest_host(hasher, tokens, chunk_words: int,
     """Numpy uint64 reference of stream()/update()/digest() over the whole
     token sequence at once -- the ground truth for the incremental device
     path (tests assert bit-equality and split-invariance against this)."""
+    if chunk_words < 1:
+        raise ValueError("chunk_words must be >= 1")
     toks = np.asarray(tokens, np.uint32).reshape(-1)
+    n = len(toks)
+    needed = n // chunk_words + bool(n % chunk_words)
+    if needed > max_chunks:
+        # same contract as the device path's _check_overflow -- previously
+        # this fell through to a raw IndexError on the level-2 key array
+        raise ValueError(
+            f"stream overflow: {needed} chunks exceeds the static "
+            f"max_chunks={max_chunks} bound (rebuild the stream with "
+            f"a larger max_chunks or chunk_words)")
     k1 = hasher._mkb.buffers[0].u64(chunk_words + 1)
     l2 = KeyBuffer(seed=level2_seed(hasher.spec.stream_seeds()[0]),
                    initial=2 * max_chunks + 4).u64(2 * max_chunks + 3)
     with np.errstate(over="ignore"):
-        n = len(toks)
         count, fill = n // chunk_words, n % chunk_words
         acc = np.uint64(0)
         for j in range(count + (1 if fill else 0)):
@@ -236,7 +246,7 @@ def stream_digest_host(hasher, tokens, chunk_words: int,
 
 
 def fingerprint_bytes(data: bytes, *, seed: int = DEFAULT_SEED, keys=None,
-                      chunk_words: int = 1 << 16) -> int:
+                      chunk_words: int = 1 << 16, tree=None) -> int:
     """64-bit Multilinear fingerprint of a byte string (checkpoint integrity).
 
     Bytes are padded to a whole number of 32-bit words, length-prepended
@@ -245,7 +255,16 @@ def fingerprint_bytes(data: bytes, *, seed: int = DEFAULT_SEED, keys=None,
     values hashed again, so arbitrarily long buffers need only `chunk_words`
     keys (two-level tree -- same trick UMAC uses, strongly universal at each
     level). Bit-identical to the legacy `core.ops.fingerprint_bytes`.
+
+    `tree` (a `repro.hash.tree.TreeHasher`) routes EVERY call through the
+    mesh-parallel tree fingerprint instead -- different values than the
+    default serial layout (a digest scheme, not a knob), but O(bytes/D)
+    wall-clock on long inputs. Callers pick one scheme and keep it.
     """
+    if chunk_words < 1:
+        raise ValueError("chunk_words must be >= 1")
+    if tree is not None:
+        return tree.fingerprint_bytes(data)
     from . import keyring
 
     kb = keys if keys is not None else keyring.key_buffer(seed)

@@ -1,0 +1,454 @@
+"""HalftimeHash-style tree fingerprints for long token streams.
+
+The engine's families hash one bounded (B, N) buffer per call; `streaming`
+folds a stream serially.  Neither gives long inputs (multi-GB pytrees,
+checkpoint shards, long documents) a *parallel* path.  This module is the
+tree construction of HalftimeHash (arXiv 2104.08865) rebuilt on the paper's
+MULTILINEAR leaves -- notable because HalftimeHash's premise, *no 64-bit
+multipliers*, is exactly JAX/TPU's uint32 constraint:
+
+  1. the token stream is split into fixed `leaf_words` leaf blocks;
+  2. ALL leaves are hashed in one fused multihash launch (the K-fused
+     engine of kernels/multihash.py via `Hasher.__call__` -- fixed-length
+     semantics, so a leaf's digest is `m1 + sum k_i * t_i mod 2^64`);
+  3. leaf digests are combined by a logarithmic pairwise fold: level `l`
+     compresses each (a, b) digest pair to
+
+         m1_l + k1_l*a_lo + k2_l*a_hi + k3_l*b_lo + k4_l*b_hi  (mod 2^64)
+
+     -- a MULTILINEAR hash of the 4-character string (a_lo, a_hi, b_lo,
+     b_hi) under fresh level-l keys (an odd trailing node is promoted
+     unchanged); the root is finalized the same way against a 64-bit
+     length tag, restoring injectivity under trailing-zero padding.
+
+Every level is a strongly universal compression over its own independent
+key words, so the whole tree inherits the composed collision bound
+`core.theory.tree_collision_bound` (DESIGN.md section 10).
+
+Leaf hashing is embarrassingly parallel: with a mesh, step 2 runs through
+`ShardedHasher` (`shard_map` over the 'data' axis, B/D leaf rows per
+device) and only the tiny (n_leaves, 2) digest array is gathered for the
+fold -- O(bytes/D) wall-clock, digests bit-identical across D=1/D=8 and
+across ANY chunking of the same stream (the tree shape is a pure function
+of total length, never of update boundaries).
+
+Key schedule: leaf keys are the wrapped Hasher's stream-0 Philox words;
+fold level `l` uses words [5l, 5l+5) of an independent stream seeded
+`stream0_seed ^ _FOLD_TAG` (level 0 of that stream finalizes).  All key
+material is a pure function of the `TreeSpec` seed, like `keyring`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import limbs
+from ..core.keys import KeyBuffer
+from .hasher import Hasher
+from .spec import DEFAULT_SEED, FAMILY_NAMES, HashSpec
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+# Domain-separation tag for the fold key stream: distinct from every leaf
+# stream (seed ^ j*GOLDEN64) and from streaming._L2_TAG.
+_FOLD_TAG = 0x7EE0_F01D_5CA1_AB1E
+
+#: u64 key words per fold level: (m1, k1, k2, k3, k4).
+FOLD_WORDS = 5
+
+
+def fold_seed(stream0_seed: int) -> int:
+    return (int(stream0_seed) ^ _FOLD_TAG) % (1 << 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpec:
+    """Static shape of a tree fingerprint: leaf size, leaf family, seed.
+
+    Two TreeHashers with equal specs produce bit-identical digests -- the
+    spec (not the device count, not the update chunking) is the identity.
+    """
+
+    leaf_words: int = 256
+    family: str = "multilinear"
+    seed: int = DEFAULT_SEED
+
+    def __post_init__(self):
+        if self.leaf_words < 1:
+            raise ValueError(f"leaf_words must be >= 1, got {self.leaf_words}")
+        if self.family not in FAMILY_NAMES:
+            raise KeyError(
+                f"unknown engine family {self.family!r}; have {FAMILY_NAMES}")
+
+    def leaf_spec(self) -> HashSpec:
+        """The fixed-length 64-bit single-stream spec hashing the leaves."""
+        return HashSpec(family=self.family, n_hashes=1, out_bits=64,
+                        variable_length=False, seed=self.seed)
+
+
+def _fold_pair(kw, a_hi, a_lo, b_hi, b_lo):
+    """One strongly-universal pair compression (pure JAX limb arithmetic).
+
+    kw: 5 (hi, lo) numpy-uint32 scalar pairs (m1, k1..k4) -- numpy scalars
+    stay literals in the jaxpr, so fold keys never become array constants.
+    """
+    (m1h, m1l), (k1h, k1l), (k2h, k2l), (k3h, k3l), (k4h, k4l) = kw
+    acc = limbs.add64(limbs.mul64_u32((k1h, k1l), a_lo),
+                      limbs.mul64_u32((k2h, k2l), a_hi))
+    acc = limbs.add64(acc, limbs.mul64_u32((k3h, k3l), b_lo))
+    acc = limbs.add64(acc, limbs.mul64_u32((k4h, k4l), b_hi))
+    return limbs.add64(acc, (jnp.broadcast_to(m1h, acc[0].shape),
+                             jnp.broadcast_to(m1l, acc[0].shape)))
+
+
+class TreeHasher:
+    """Mesh-parallel tree fingerprints over uint32 token streams.
+
+    Surfaces:
+      - ``digest_tokens(tokens, n_tokens=None)`` -- PURE JAX (zero host
+        syncs, jit/shard_map-safe): (T,) zero-padded tokens -> (2,) uint32
+        (hi, lo) of the 64-bit root digest.  `n_tokens` may be a traced
+        scalar: padding past it is masked, so callers can bucket T.
+      - ``fingerprint(tokens)`` / ``fingerprint_bytes(data)`` -- host
+        convenience (pow2 leaf bucketing, one device round-trip) -> int.
+      - ``stream()`` -- incremental `TreeStream` (split-invariant).
+      - ``digest_host(tokens)`` -- numpy/hostref twin, bit-identical.
+
+    With ``mesh=`` the leaf launch shards over the mesh data axis
+    (`ShardedHasher`); the fold runs on the gathered (n_leaves, 2) digests.
+    Digests are independent of the mesh: D=1 and D=8 are bit-identical.
+    """
+
+    def __init__(self, spec: TreeSpec = TreeSpec(), *, mesh=None,
+                 axis: str = "data", plan=None):
+        self.spec = spec
+        self.hasher = Hasher.from_spec(spec.leaf_spec(),
+                                       max_len=spec.leaf_words, plan=plan)
+        self.sharded = (self.hasher.sharded(mesh, axis)
+                        if mesh is not None else None)
+        self._fold = KeyBuffer(seed=fold_seed(self.hasher.spec.stream_seeds()[0]),
+                               initial=FOLD_WORDS * 8)
+        self._level_cache: dict[int, tuple] = {}
+        self._jit = jax.jit(self._digest_impl)
+
+    # -- fold key schedule ---------------------------------------------------
+
+    def level_keys_u64(self, level: int) -> np.ndarray:
+        """(5,) uint64 fold key words of `level` (0 = root finalization)."""
+        lo = FOLD_WORDS * level
+        return self._fold.u64(lo + FOLD_WORDS)[lo : lo + FOLD_WORDS]
+
+    def _level_keys(self, level: int):
+        """The level's 5 key words as (hi, lo) numpy-uint32 scalar pairs."""
+        hit = self._level_cache.get(level)
+        if hit is None:
+            hit = self._level_cache[level] = tuple(
+                (np.uint32(int(k) >> 32), np.uint32(int(k) & 0xFFFFFFFF))
+                for k in self.level_keys_u64(level))
+        return hit
+
+    # -- pure JAX digest ------------------------------------------------------
+
+    def _leaf_limbs(self, rows):
+        """(L, leaf_words) rows -> ((L,) hi, (L,) lo) leaf digests, one
+        fused engine launch (sharded over the mesh data axis if present)."""
+        out = self.sharded(rows) if self.sharded is not None else \
+            self.hasher(rows)
+        return out[:, 0, 0], out[:, 0, 1]
+
+    def _digest_impl(self, tokens, n, tag_lo, tag_hi):
+        lw = self.spec.leaf_words
+        toks = jnp.asarray(tokens).reshape((-1,)).astype(U32)
+        T = toks.shape[0]
+        if T % lw:
+            raise ValueError(f"padded stream of {T} tokens is not a whole "
+                             f"number of leaf_words={lw} leaves")
+        n = jnp.asarray(n, I32)
+        # mask past the true length: bucketed callers may pass garbage pad
+        toks = jnp.where(jnp.arange(T, dtype=I32) < n, toks, U32(0))
+        hi, lo = self._leaf_limbs(toks.reshape(T // lw, lw))
+        # real (non-padding) nodes occupy a prefix; t tracks its length
+        t = jnp.maximum(I32(1), (n + I32(lw - 1)) // I32(lw))
+        level = 1
+        while hi.shape[0] > 1:
+            if hi.shape[0] % 2:
+                hi = jnp.concatenate([hi, jnp.zeros((1,), U32)])
+                lo = jnp.concatenate([lo, jnp.zeros((1,), U32)])
+            a_hi, a_lo = hi[0::2], lo[0::2]
+            b_hi, b_lo = hi[1::2], lo[1::2]
+            c_hi, c_lo = _fold_pair(self._level_keys(level),
+                                    a_hi, a_lo, b_hi, b_lo)
+            # a real left with a padding right is PROMOTED unchanged (the
+            # odd-node rule), so the digest only depends on the true length
+            right_real = (2 * jnp.arange(a_hi.shape[0], dtype=I32) + 1) < t
+            hi = jnp.where(right_real, c_hi, a_hi)
+            lo = jnp.where(right_real, c_lo, a_lo)
+            t = (t + 1) // 2
+            level += 1
+        out_hi, out_lo = _fold_pair(
+            self._level_keys(0), hi[0], lo[0],
+            jnp.asarray(tag_hi, U32), jnp.asarray(tag_lo, U32))
+        return jnp.stack([out_hi, out_lo])
+
+    def digest_tokens(self, tokens, n_tokens=None):
+        """(T,) tokens (T a multiple of leaf_words after internal padding)
+        -> (2,) uint32 (hi, lo) root digest.  Pure JAX, zero host syncs.
+
+        `n_tokens` (default T, may be traced) is the TRUE stream length:
+        tokens at index >= n_tokens are masked to zero and the tree shape
+        is derived from it, so any zero-padded bucketing of the same
+        stream digests identically.
+        """
+        toks = jnp.asarray(tokens).reshape((-1,))
+        T = toks.shape[0]
+        lw = self.spec.leaf_words
+        pad = (-T) % lw if T else lw
+        if pad:
+            toks = jnp.pad(toks.astype(U32), (0, pad))
+        n = T if n_tokens is None else n_tokens
+        return self._digest_impl(toks, n, jnp.asarray(n, U32).astype(U32),
+                                 U32(0))
+
+    # -- host convenience -----------------------------------------------------
+
+    def _stage(self, tokens):
+        """Zero-pad a host stream to a pow2 leaf count (bounded jit traces;
+        the padding is invisible to the digest by the n_tokens mask)."""
+        from ..kernels.autotune import pow2_at_least
+
+        toks = np.asarray(tokens, np.uint32).reshape(-1)
+        lw = self.spec.leaf_words
+        n = len(toks)
+        leaves = pow2_at_least(max(1, -(-n // lw)))
+        buf = np.zeros(leaves * lw, np.uint32)
+        buf[:n] = toks
+        return buf, n
+
+    def _fingerprint_staged(self, buf, n: int, tag: int) -> int:
+        if not 0 <= tag < (1 << 64):
+            raise ValueError(f"length tag {tag} out of u64 range")
+        out = np.asarray(self._jit(jnp.asarray(buf), np.int32(n),
+                                   np.uint32(tag & 0xFFFFFFFF),
+                                   np.uint32(tag >> 32)))
+        return (int(out[0]) << 32) | int(out[1])
+
+    def fingerprint(self, tokens) -> int:
+        """64-bit tree fingerprint of a host token sequence (one launch
+        for all leaves + the jitted fold; pow2 leaf bucketing)."""
+        buf, n = self._stage(tokens)
+        return self._fingerprint_staged(buf, n, tag=n)
+
+    def fingerprint_bytes(self, data: bytes) -> int:
+        """64-bit tree fingerprint of a byte string: bytes are packed into
+        little-endian uint32 words (zero-padded) and the BYTE length is the
+        finalization tag, so buffers differing only in trailing pad bytes
+        digest differently."""
+        pad = (-len(data)) % 4
+        arr = np.frombuffer(bytes(data) + b"\0" * pad, dtype="<u4")
+        buf, n = self._stage(arr)
+        return self._fingerprint_staged(buf, n, tag=len(data))
+
+    def fingerprint_array(self, arr) -> int:
+        """Tree fingerprint of one array's raw bytes (checkpoint leaves)."""
+        return self.fingerprint_bytes(np.asarray(arr).tobytes())
+
+    # -- incremental ----------------------------------------------------------
+
+    def stream(self, leaf_batch: int = 1024) -> "TreeStream":
+        """Fresh incremental tree stream; `leaf_batch` complete leaves are
+        buffered before each fused flush launch."""
+        return TreeStream(self, leaf_batch=leaf_batch)
+
+    # -- numpy twin -----------------------------------------------------------
+
+    def _leaf_digests_host(self, rows) -> np.ndarray:
+        """(L, leaf_words) -> (L,) uint64 leaf digests on the vectorized
+        hostref path (bit-identical to the fused engine launch)."""
+        return self.hasher.hash_batch(np.asarray(rows, np.uint32),
+                                      backend="host")[:, 0]
+
+    def _fold_host(self, digests: np.ndarray, tag: int) -> int:
+        """Numpy-uint64 fold + finalization over (L,) uint64 leaf digests."""
+        mask = np.uint64(0xFFFFFFFF)
+        with np.errstate(over="ignore"):
+            nodes = np.asarray(digests, np.uint64)
+            level = 1
+            while len(nodes) > 1:
+                m1, k1, k2, k3, k4 = self.level_keys_u64(level)
+                a, b = nodes[0 : 2 * (len(nodes) // 2) : 2], nodes[1::2]
+                comb = (m1 + k1 * (a & mask) + k2 * (a >> np.uint64(32))
+                        + k3 * (b & mask) + k4 * (b >> np.uint64(32)))
+                nodes = (comb if len(nodes) % 2 == 0
+                         else np.concatenate([comb, nodes[-1:]]))
+                level += 1
+            m1, k1, k2, k3, k4 = self.level_keys_u64(0)
+            root = nodes[0]
+            t = np.uint64(tag)
+            out = (m1 + k1 * (root & mask) + k2 * (root >> np.uint64(32))
+                   + k3 * (t & mask) + k4 * (t >> np.uint64(32)))
+        return int(out)
+
+    def digest_host(self, tokens, tag: int | None = None) -> int:
+        """Numpy/hostref reference of `fingerprint` -- the ground truth the
+        device path is pinned against (leaf AND fold bit-identity)."""
+        toks = np.asarray(tokens, np.uint32).reshape(-1)
+        lw = self.spec.leaf_words
+        n = len(toks)
+        leaves = max(1, -(-n // lw))
+        buf = np.zeros(leaves * lw, np.uint32)
+        buf[:n] = toks
+        digs = self._leaf_digests_host(buf.reshape(leaves, lw))
+        return self._fold_host(digs, n if tag is None else tag)
+
+
+class TreeStream:
+    """Incremental tree fingerprint: absorb token blocks in ANY split, get
+    the same digest as the one-shot `TreeHasher.fingerprint` of the
+    concatenated stream (pinned in tests).
+
+    State is O(n_leaves): the partial leaf buffer plus 8 bytes per finished
+    leaf digest (1/(4*leaf_words) of the input).  Complete leaves are
+    flushed through the fused engine launch `leaf_batch` at a time, so
+    absorption stays one launch per ~`leaf_batch * leaf_words` tokens.
+    """
+
+    def __init__(self, hasher: TreeHasher, leaf_batch: int = 1024):
+        if leaf_batch < 1:
+            raise ValueError("leaf_batch must be >= 1")
+        self.hasher = hasher
+        self.leaf_batch = int(leaf_batch)
+        self._lw = hasher.spec.leaf_words
+        self._parts: list[np.ndarray] = []   # buffered, not yet full leaves
+        self._nbuf = 0                       # tokens across _parts
+        self._digests: list[np.ndarray] = []  # (c,) uint64 per flush
+        self.total = 0                       # tokens absorbed overall
+
+    def update(self, tokens) -> "TreeStream":
+        toks = np.asarray(tokens, np.uint32).reshape(-1)
+        if len(toks) == 0:
+            return self
+        self._parts.append(toks)
+        self._nbuf += len(toks)
+        self.total += len(toks)
+        if self._nbuf >= self.leaf_batch * self._lw:
+            self._flush()
+        return self
+
+    def _leaf_digests(self, rows: np.ndarray) -> np.ndarray:
+        """(c, leaf_words) -> (c,) uint64 via the fused engine launch
+        (sharded when the TreeHasher has a mesh) -- bit-identical to the
+        in-graph leaf pass, per the engine's backend-identity contract."""
+        th = self.hasher
+        if th.sharded is not None:
+            return th.sharded.hash_batch(rows)[:, 0]
+        return th.hasher.hash_batch(rows)[:, 0]
+
+    def _flush(self, final: bool = False) -> None:
+        buf = (np.concatenate(self._parts) if self._parts
+               else np.zeros(0, np.uint32))
+        lw = self._lw
+        c = len(buf) // lw
+        if final:
+            c = max(1 if self.total == 0 else -(-len(buf) // lw), c)
+        if c == 0:
+            return
+        take = buf[: c * lw]
+        if len(take) < c * lw:  # final partial leaf: zero-pad
+            take = np.concatenate(
+                [take, np.zeros(c * lw - len(take), np.uint32)])
+        self._digests.append(self._leaf_digests(take.reshape(c, lw)))
+        rest = buf[c * lw :]
+        self._parts = [rest] if len(rest) else []
+        self._nbuf = len(rest)
+
+    def digest_int(self) -> int:
+        """Finalize (non-destructively) to the 64-bit root fingerprint."""
+        parts, nbuf = list(self._parts), self._nbuf
+        digests = list(self._digests)
+        self._flush(final=True)
+        digs = (np.concatenate(self._digests) if self._digests
+                else np.zeros(0, np.uint64))
+        out = self.hasher._fold_host(digs, self.total)
+        # restore: digest() must not change what a later update() absorbs
+        self._parts, self._nbuf, self._digests = parts, nbuf, digests
+        return out
+
+
+def stream_tree(spec: TreeSpec = TreeSpec(), *, mesh=None,
+                leaf_batch: int = 1024) -> TreeStream:
+    """Incremental tree fingerprint over a default (cached) TreeHasher --
+    the long-input route for `streaming.fingerprint_bytes` and the serve
+    engine's prompt keys."""
+    return default_tree_hasher(spec, mesh=mesh).stream(leaf_batch=leaf_batch)
+
+
+# -- default instances (deterministic, like keyring) --------------------------
+
+_DEFAULT: dict = {}
+
+
+def default_tree_hasher(spec: TreeSpec = TreeSpec(), *, mesh=None) -> TreeHasher:
+    """Process-cached TreeHasher for a spec (pure function of the spec, so
+    the cache changes cost, never values).  Mesh-bound instances are cached
+    per mesh object."""
+    key = (spec, None if mesh is None else id(mesh))
+    th = _DEFAULT.get(key)
+    if th is None:
+        th = _DEFAULT[key] = TreeHasher(spec, mesh=mesh)
+        while len(_DEFAULT) > 16:
+            _DEFAULT.pop(next(iter(_DEFAULT)))
+    return th
+
+
+# -- pytree fingerprints ------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PytreeFingerprint:
+    """Root digest + per-leaf digests of one pytree, in flatten order."""
+
+    root: int
+    leaves: "tuple[tuple[str, int], ...]"
+
+    def leaf_map(self) -> "dict[str, int]":
+        return dict(self.leaves)
+
+
+def _leaf_path(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def root_of_leaf_fingerprints(pairs, hasher: TreeHasher | None = None) -> int:
+    """Root digest over ordered (path, leaf_fp) pairs: the tree fingerprint
+    of the ``[path_fp, leaf_fp]`` word stream, covering both structure
+    (paths and order) and content.  Shared by `fingerprint_pytree` and the
+    checkpoint manifest, which re-derives roots from stored leaf digests."""
+    th = hasher if hasher is not None else default_tree_hasher()
+    words = np.zeros(4 * len(pairs), np.uint32)
+    for i, (path, fp) in enumerate(pairs):
+        pfp = th.fingerprint_bytes(path.encode())
+        words[4 * i : 4 * i + 4] = (
+            pfp & 0xFFFFFFFF, pfp >> 32, fp & 0xFFFFFFFF, fp >> 32)
+    return th.fingerprint(words)
+
+
+def fingerprint_pytree(tree, hasher: TreeHasher | None = None, *,
+                       mesh=None) -> PytreeFingerprint:
+    """Flatten -> per-leaf-array tree digests -> root digest.
+
+    Each leaf array's raw bytes get a tree fingerprint (one fused leaf
+    launch per array); the root combines them with their paths in flatten
+    order via `root_of_leaf_fingerprints`.  This is the checkpoint-
+    integrity surface (`checkpoint.Checkpointer`).
+    """
+    th = hasher if hasher is not None else default_tree_hasher(mesh=mesh)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for kp, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        leaves.append((_leaf_path(kp), th.fingerprint_bytes(arr.tobytes())))
+    return PytreeFingerprint(root=root_of_leaf_fingerprints(leaves, th),
+                             leaves=tuple(leaves))

@@ -108,6 +108,46 @@ def gf_multilinear_hm(toks, khi, klo):
     return h, jnp.zeros_like(h)
 
 
+def tree_multilinear(toks, khi, klo):
+    """hash.tree composition at battery scale: 2-token MULTILINEAR leaves
+    (all leaves of a row share key words 0..2 -- m1, k1, k2 -- exactly as a
+    TreeHasher's leaves share one leaf Hasher) combined by the pairwise
+    fold ``m1_l + f1*a_lo + f2*a_hi + f3*b_lo + f4*b_hi`` with 5 fresh key
+    words per level. The length-tag finalization is a keyed affine shift of
+    a constant for the battery's fixed N, so it is not replicated here --
+    this measures the leaf+fold compression the bound in
+    `core.theory.tree_collision_bound` is about."""
+    B, N = toks.shape
+    t = toks.reshape(B, N // 2, 2)
+    p1 = limbs.mul64_u32((khi[:, 1:2], klo[:, 1:2]), t[:, :, 0])
+    p2 = limbs.mul64_u32((khi[:, 2:3], klo[:, 2:3]), t[:, :, 1])
+    hi, lo = limbs.add64(limbs.add64(p1, p2), (khi[:, 0:1], klo[:, 0:1]))
+    off = 3
+    while hi.shape[1] > 1:
+        P = hi.shape[1] // 2
+        kw = [(khi[:, off + j : off + j + 1], klo[:, off + j : off + j + 1])
+              for j in range(5)]
+        a_hi, a_lo = hi[:, 0::2], lo[:, 0::2]
+        b_hi, b_lo = hi[:, 1::2], lo[:, 1::2]
+        acc = limbs.add64(limbs.mul64_u32(kw[1], a_lo[:, :P]),
+                          limbs.mul64_u32(kw[2], a_hi[:, :P]))
+        acc = limbs.add64(acc, limbs.mul64_u32(kw[3], b_lo))
+        acc = limbs.add64(acc, limbs.mul64_u32(kw[4], b_hi))
+        c_hi, c_lo = limbs.add64(acc, kw[0])
+        if a_hi.shape[1] > P:  # odd node count: promote the trailing leaf
+            c_hi = jnp.concatenate([c_hi, a_hi[:, P:]], axis=1)
+            c_lo = jnp.concatenate([c_lo, a_lo[:, P:]], axis=1)
+        hi, lo = c_hi, c_lo
+        off += 5
+    return hi[:, 0], lo[:, 0]
+
+
+def _tree_key_words(n: int) -> int:
+    """3 leaf words + 5 per fold level over n//2 leaves (8 at N_TOKENS=4)."""
+    leaves = max(1, n // 2)
+    return 3 + 5 * max(0, (leaves - 1).bit_length())
+
+
 def xor_folklore(toks, khi, klo):
     """KNOWN BAD (paper §4): XOR of (k_{2i}+s_{2i})(k_{2i+1}+s_{2i+1})
     products -- 32-bit keys (lo plane), 32x32->64 products, xor-accumulated.
@@ -135,6 +175,12 @@ _IMPLS = {
     "multilinear_hm": multilinear_hm,
     "gf_multilinear": gf_multilinear,
     "gf_multilinear_hm": gf_multilinear_hm,
+    "tree_multilinear": tree_multilinear,
+}
+
+# families whose key-word budget is not the default n + 1
+_KEY_WORDS = {
+    "tree_multilinear": _tree_key_words,
 }
 
 
@@ -148,7 +194,7 @@ def battery_families() -> "list[BatteryFamily]":
         traits = hash_spec.FAMILIES[name]
         out.append(BatteryFamily(
             name=name, fn=_IMPLS[name],
-            key_words=(lambda n: n + 1),
+            key_words=_KEY_WORDS.get(name, lambda n: n + 1),
             acc64=traits.acc64, engine=traits.engine))
     out.append(BatteryFamily(
         name="bad_xor_folklore", fn=xor_folklore,

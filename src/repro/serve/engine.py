@@ -36,7 +36,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, api, params, *, n_slots: int = 4, max_seq: int = 256,
-                 greedy: bool = True, mesh=None, admission=None):
+                 greedy: bool = True, mesh=None, admission=None,
+                 tree_prompt_words: int = 1 << 12):
         self.api = api
         self.params = params
         self.B = n_slots
@@ -55,6 +56,13 @@ class ServeEngine:
         # hashing overlaps prefill compute. mesh=None uses the live device
         # set (a 1-device mesh on CPU -- same code path).
         self._prefix_sharded = self._prefix_hasher.sharded(mesh)
+        # prompts at/past this length take the mesh-parallel tree path
+        # (repro.hash.tree) instead of padding the batched launch out to
+        # the longest prompt; routing is by length alone, so a prompt's
+        # key is stable across batch compositions
+        self.tree_prompt_words = int(tree_prompt_words)
+        self._mesh = mesh
+        self._tree = None  # lazy TreeHasher; engines with short max_seq never build it
         self._pending_keys = None  # (req_ids, in-flight device array)
         self._req_key_cache: dict[int, int] = {}
         self.slots: list[Request | None] = [None] * n_slots
@@ -70,22 +78,49 @@ class ServeEngine:
 
     # -- prefix cache (paper fingerprints, DESIGN.md §3/§7) ------------------
 
+    def _tree_hasher(self):
+        if self._tree is None:
+            from ..hash.tree import TreeHasher, TreeSpec
+
+            self._tree = TreeHasher(TreeSpec(seed=_PREFIX_KEY_SEED),
+                                    mesh=self._mesh)
+        return self._tree
+
     def _prompt_key(self, prompt: np.ndarray) -> int:
-        """64-bit variable-length fingerprint of one prompt (host path --
-        bit-identical to the batched device path used in submit_all)."""
+        """64-bit fingerprint of one prompt. Short prompts: variable-length
+        host path (bit-identical to the batched device path used in
+        submit_all). Long prompts (>= tree_prompt_words): tree fingerprint
+        -- same value the precompute path assigns them."""
+        toks = prompt.astype(np.uint32)
+        if len(toks) >= self.tree_prompt_words:
+            return self._tree_hasher().fingerprint(toks)
         return int(self._prefix_hasher.hash_batch(
-            [prompt.astype(np.uint32)], backend="host")[0, 0])
+            [toks], backend="host")[0, 0])
 
     def _precompute_prompt_keys(self, requests: "list[Request]") -> None:
         """Fingerprint every pending prompt in ONE device-sharded hash
         launch, dispatched asynchronously (jax async dispatch: no host sync
         here; `_drain_prompt_keys` materializes on first use). Shapes are
         pow2-bucketed so varying request counts / prompt lengths reuse a
-        bounded set of traces instead of compiling per submit_all."""
+        bounded set of traces instead of compiling per submit_all.
+
+        Prompts at/past `tree_prompt_words` are fingerprinted through the
+        mesh-parallel tree path instead (one fused leaf launch each,
+        straight into the key cache), so a single huge prompt neither
+        inflates the batch pad width nor serializes into a host loop."""
         if not requests:
             return
         from ..kernels.autotune import pow2_at_least
 
+        long_reqs = [r for r in requests
+                     if len(r.prompt) >= self.tree_prompt_words]
+        for r in long_reqs:
+            self._req_key_cache[r.req_id] = self._tree_hasher().fingerprint(
+                r.prompt.astype(np.uint32))
+        requests = [r for r in requests
+                    if len(r.prompt) < self.tree_prompt_words]
+        if not requests:
+            return
         prompts = [r.prompt.astype(np.uint32) for r in requests]
         n_pad = pow2_at_least(max((len(p) for p in prompts), default=1) or 1)
         b_pad = pow2_at_least(len(prompts))

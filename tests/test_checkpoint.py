@@ -142,13 +142,13 @@ def test_verify_cache_skips_refingerprint(tmp_path, monkeypatch):
     ck.save(1, _state(1))
     ck.save(2, _state(2))
     calls = {"n": 0}
-    real_fp = ckpt_mod.fingerprint_bytes
+    real_fp = ckpt_mod._leaf_fingerprint
 
-    def counting_fp(raw):
+    def counting_fp(arr, scheme):
         calls["n"] += 1
-        return real_fp(raw)
+        return real_fp(arr, scheme)
 
-    monkeypatch.setattr(ckpt_mod, "fingerprint_bytes", counting_fp)
+    monkeypatch.setattr(ckpt_mod, "_leaf_fingerprint", counting_fp)
     assert ck.latest_valid() == 2
     first = calls["n"]
     assert first > 0
@@ -161,3 +161,96 @@ def test_verify_cache_skips_refingerprint(tmp_path, monkeypatch):
     open(path, "wb").write(bytes(data))
     assert ck.latest_valid() == 1
     assert calls["n"] > first
+
+
+# ---------------------------------------------------------------------------
+# tree-v1 integrity scheme (hash.tree) + legacy manifest compatibility
+# ---------------------------------------------------------------------------
+
+def test_manifest_carries_tree_scheme_and_root(tmp_path):
+    from repro.hash.tree import default_tree_hasher, root_of_leaf_fingerprints
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state())
+    with open(os.path.join(str(tmp_path), "step_1", "manifest.json")) as f:
+        man = json.load(f)
+    assert man["scheme"] == "tree-v1"
+    th = default_tree_hasher()
+    data = np.load(os.path.join(str(tmp_path), "step_1", "arrays.npz"))
+    pairs = []
+    for path, meta in man["leaves"].items():
+        fp = th.fingerprint_bytes(data[meta["key"]].tobytes())
+        assert meta["fingerprint"] == f"{fp:016x}", path
+        pairs.append((path, fp))
+    assert man["root"] == f"{root_of_leaf_fingerprints(pairs):016x}"
+
+
+def test_root_digest_catches_manifest_leaf_swap(tmp_path):
+    """Two individually-intact leaves swapped in the manifest: every
+    per-leaf fingerprint still matches its (relabeled) array, so only the
+    pytree root catches it."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.zeros((4,)), "b": jnp.ones((4,))})
+    assert ck.verify(1)
+    man_path = os.path.join(str(tmp_path), "step_1", "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    a, b = man["leaves"]["a"], man["leaves"]["b"]
+    man["leaves"]["a"], man["leaves"]["b"] = b, a
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    ck._verify_cache.clear()
+    assert not ck.verify(1)
+
+
+def test_legacy_manifest_still_verifies(tmp_path):
+    """Pre-tree checkpoints (no "scheme" key, streaming fingerprints) must
+    keep verifying and restoring bit-for-bit -- and keep detecting
+    corruption -- for one release."""
+    from repro.hash import fingerprint_bytes
+
+    ck = Checkpointer(str(tmp_path))
+    st = _state()
+    ck.save(1, st)
+    step = os.path.join(str(tmp_path), "step_1")
+    with open(os.path.join(step, "manifest.json")) as f:
+        man = json.load(f)
+    # rewrite as a legacy manifest: streaming fingerprints, no scheme/root
+    data = np.load(os.path.join(step, "arrays.npz"))
+    man.pop("scheme"); man.pop("root")
+    for path, meta in man["leaves"].items():
+        meta["fingerprint"] = f"{fingerprint_bytes(data[meta['key']].tobytes()):016x}"
+    with open(os.path.join(step, "manifest.json"), "w") as f:
+        json.dump(man, f)
+    ck._verify_cache.clear()
+    assert ck.verify(1)
+    out = ck.restore(1, jax.tree.map(lambda x: jnp.zeros_like(x), st))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+    # corruption detection parity: flip one byte, legacy path must catch it
+    npz = os.path.join(step, "arrays.npz")
+    raw = bytearray(open(npz, "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(npz, "wb").write(bytes(raw))
+    ck._verify_cache.clear()
+    assert not ck.verify(1)
+
+
+def test_tree_and_legacy_detect_same_corruption():
+    """A/B bit-identity guard (one release): both schemes' fingerprints of
+    the same buffer react to the same single-byte flip, and the tree scheme
+    equals hash.tree's fingerprint_bytes exactly."""
+    from repro.checkpoint.checkpointer import _leaf_fingerprint
+    from repro.hash import fingerprint_bytes
+    from repro.hash.tree import default_tree_hasher
+
+    arr = np.arange(1024, dtype=np.float32)
+    bad = arr.copy().view(np.uint8)
+    bad[100] ^= 0xFF
+    bad = bad.view(np.float32)
+    for scheme in ("tree-v1", "stream-v0"):
+        assert _leaf_fingerprint(arr, scheme) != _leaf_fingerprint(bad, scheme)
+    assert _leaf_fingerprint(arr, "tree-v1") == \
+        default_tree_hasher().fingerprint_bytes(arr.tobytes())
+    assert _leaf_fingerprint(arr, "stream-v0") == \
+        fingerprint_bytes(arr.tobytes())

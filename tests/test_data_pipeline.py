@@ -81,3 +81,26 @@ def test_exact_dedup():
     assert d.check_and_add(a)
     assert not d.check_and_add(a.copy())
     assert d.check_and_add(np.asarray([1, 2, 3, 0], np.uint32))  # length-aware
+
+
+def test_add_documents_routes_by_length():
+    """Short docs ride the batched fingerprint; long docs the tree path.
+    Verdicts must be stable across batch composition and arrival order
+    (first occurrence wins)."""
+    rng = np.random.default_rng(11)
+    long_doc = rng.integers(0, 2**32, size=5000, dtype=np.uint32)
+    short_doc = rng.integers(0, 2**32, size=40, dtype=np.uint32)
+    d = ExactDedup()
+    mask = d.add_documents([short_doc, long_doc, short_doc.copy(),
+                            long_doc.copy()])
+    assert mask.tolist() == [True, True, False, False]
+    # same docs in a fresh instance, different batching: same verdicts
+    d2 = ExactDedup()
+    assert d2.add_documents([long_doc]).tolist() == [True]
+    assert d2.add_documents([long_doc.copy(), short_doc]).tolist() == \
+        [False, True]
+    # short path stays consistent with check_and_add history
+    d3 = ExactDedup()
+    assert d3.check_and_add(short_doc)
+    assert d3.add_documents([short_doc.copy()]).tolist() == [False]
+    assert d3.add_documents([]).tolist() == []

@@ -197,6 +197,53 @@ def test_stream_overflow_raises_loudly():
         h.digest_int(st)
 
 
+def test_stream_boundary_goldens():
+    """Pinned digests at the edges -- zero-length, single token, exactly
+    one chunk, exact chunk multiples, and exactly max_chunks (24 tokens =
+    3 chunks of 8 at max_chunks=3 must fit, not overflow). The tree path
+    (hash.tree) shares these edge semantics; a drift here is a wire-format
+    break."""
+    h = Hasher.from_spec(HashSpec(family="multilinear", n_hashes=1,
+                                  out_bits=64, seed=0xAB), max_len=8)
+    toks = (np.arange(123, dtype=np.uint32) * np.uint32(2654435761)) \
+        ^ np.uint32(0x9E37)
+    golden = {0: 0x8B947ECE848198CF, 1: 0xC9D3E6FDAE306EC2,
+              7: 0x3003619143E6DBA8, 8: 0x94170584BBD7799B,
+              16: 0x5D2387D4D9BFC4D5, 24: 0x1BD231C97E7F4BAA}
+    for n, want in golden.items():
+        got = stream_digest_host(h, toks[:n], 8, max_chunks=3)
+        assert got == want, (n, hex(got))
+        # the device stream agrees on every edge
+        st = h.update(h.stream(chunk_words=8, max_chunks=3), toks[:n])
+        assert h.digest_int(st) == want, n
+
+
+def test_stream_digest_host_overflow_raises():
+    """Past max_chunks the host reference must raise the same loud
+    ValueError as the device path's _check_overflow -- previously it fell
+    through to a raw IndexError on the level-2 key array."""
+    h = Hasher.from_spec(HashSpec(seed=0xAB), max_len=8)
+    toks = np.arange(25, dtype=np.uint32)
+    # 25 tokens = 3 full chunks + partial = 4 > max_chunks=3
+    with pytest.raises(ValueError, match="stream overflow"):
+        stream_digest_host(h, toks, 8, max_chunks=3)
+    with pytest.raises(ValueError, match="chunk_words"):
+        stream_digest_host(h, toks, 0)
+
+
+def test_fingerprint_bytes_boundary_goldens():
+    from repro.hash import fingerprint_bytes
+
+    assert fingerprint_bytes(b"") == 0x425B0BAD5E070A56
+    assert fingerprint_bytes(b"abc") == 0xEB9E77C9EC64DBB2
+    # exactly chunk-multiple wordcount (length prefix + 4096 words over
+    # chunk_words=16) exercises the multi-chunk level-2 path
+    assert fingerprint_bytes(bytes(range(256)) * 16, chunk_words=16) == \
+        0x2E89C00ED3A233C1
+    with pytest.raises(ValueError, match="chunk_words"):
+        fingerprint_bytes(b"abc", chunk_words=0)
+
+
 def test_key_planes_are_lazy():
     """Host-only use (hash_batch) must not upload device key planes; the
     pure call path materializes them on first access."""

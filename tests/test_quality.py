@@ -181,6 +181,56 @@ def test_gf_adapters_match_engine(name, engine_fn):
     assert not np.asarray(lo).any()
 
 
+def test_tree_adapter_matches_numpy_reference():
+    """The tree adapter against an independent numpy-uint64 restatement of
+    the leaf+fold composition, per-row keys included -- so the battery
+    provably measures hash.tree's arithmetic, not a lookalike."""
+    b, n = 64, 4
+    toks = RNG.integers(0, 2**32, (b, n), dtype=np.uint64).astype(np.uint32)
+    keys = RNG.integers(0, 2**64, (b, 8), dtype=np.uint64)
+    khi = jnp.asarray((keys >> 32).astype(np.uint32))
+    klo = jnp.asarray(keys.astype(np.uint32))
+    hi, lo = qfam.tree_multilinear(jnp.asarray(toks), khi, klo)
+    got = (np.asarray(hi).astype(np.uint64) << 32) | np.asarray(lo)
+    t = toks.astype(np.uint64)
+    with np.errstate(over="ignore"):
+        leaf0 = keys[:, 0] + keys[:, 1] * t[:, 0] + keys[:, 2] * t[:, 1]
+        leaf1 = keys[:, 0] + keys[:, 1] * t[:, 2] + keys[:, 2] * t[:, 3]
+        mask = np.uint64(0xFFFFFFFF)
+        want = (keys[:, 3]
+                + keys[:, 4] * (leaf0 & mask) + keys[:, 5] * (leaf0 >> 32)
+                + keys[:, 6] * (leaf1 & mask) + keys[:, 7] * (leaf1 >> 32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tree_adapter_fold_matches_tree_hasher_fold():
+    """The adapter's fold stage IS TreeHasher's: feed the REAL fold keys of
+    a TreeHasher level through both and compare bit-for-bit."""
+    from repro.hash.tree import TreeHasher, TreeSpec
+
+    th = TreeHasher(TreeSpec(leaf_words=2))
+    m1, k1, k2 = (int(x) for x in th.hasher._mkb.buffers[0].u64(3))
+    fold = [int(x) for x in th.level_keys_u64(1)]
+    fin = [int(x) for x in th.level_keys_u64(0)]
+    b = 16
+    toks = RNG.integers(0, 2**32, (b, 4), dtype=np.uint64).astype(np.uint32)
+    keys = np.asarray([[m1, k1, k2, *fold]] * b, dtype=np.uint64)
+    khi = jnp.asarray((keys >> 32).astype(np.uint32))
+    klo = jnp.asarray(keys.astype(np.uint32))
+    hi, lo = qfam.tree_multilinear(jnp.asarray(toks), khi, klo)
+    root = (np.asarray(hi).astype(np.uint64) << 32) | np.asarray(lo)
+    # finalize each root with the 4-token length tag: must equal the full
+    # TreeHasher digest of that row's tokens
+    mask = np.uint64(0xFFFFFFFF)
+    with np.errstate(over="ignore"):
+        want = (np.uint64(fin[0])
+                + np.uint64(fin[1]) * (root & mask)
+                + np.uint64(fin[2]) * (root >> np.uint64(32))
+                + np.uint64(fin[3]) * np.uint64(4))
+    for r in range(b):
+        assert th.fingerprint(toks[r]) == int(want[r]), r
+
+
 def test_battery_registry_covers_every_family():
     """The sweep is registry-driven: every registered family has a battery
     entry, the known-bad controls ride at the end, and an unregistered
@@ -194,7 +244,8 @@ def test_battery_registry_covers_every_family():
     assert [f.name for f in fams if f.known_bad] == \
         ["bad_xor_folklore", "bad_multilinear_trunc16"]
     for f in fams:
-        assert f.key_words(4) in (4, 5)
+        # n+1 default, n for the keyless-m1 bad control, 3+5*levels for tree
+        assert f.key_words(4) in (4, 5, 8)
 
 
 def test_known_bads_are_actually_bad():

@@ -126,3 +126,32 @@ def test_greedy_matches_manual_decode(engine):
         toks.append(int(jnp.argmax(lg[0])))
         pos += 1
     assert req.out_tokens == toks
+
+
+def test_long_prompts_route_through_tree_path(engine):
+    """Prompts at/past tree_prompt_words take the tree fingerprint (both in
+    the batched precompute and the single-prompt fallback), and identical
+    long prompts still hit the prefix cache."""
+    api, params = engine
+    eng = ServeEngine(api, params, n_slots=2, max_seq=64,
+                      tree_prompt_words=8)
+    rng = np.random.default_rng(7)
+    long_p = rng.integers(0, CFG.vocab_size, size=12).astype(np.int32)
+    short_p = rng.integers(0, CFG.vocab_size, size=4).astype(np.int32)
+    # both key surfaces agree on the long prompt's fingerprint
+    from repro.hash.tree import TreeSpec
+
+    want = eng._tree_hasher().fingerprint(long_p.astype(np.uint32))
+    assert eng._prompt_key(long_p) == want
+    assert eng._tree_hasher().spec == TreeSpec(seed=0x1E53)
+    eng._precompute_prompt_keys([Request(99, long_p.copy())])
+    assert eng._req_key_cache.pop(99) == want
+    assert eng._pending_keys is None  # no batched launch for a long-only wave
+    # end-to-end: duplicate long prompts hit the prefix logits cache
+    reqs = [Request(0, long_p.copy(), max_new_tokens=3),
+            Request(1, short_p.copy(), max_new_tokens=3),
+            Request(2, long_p.copy(), max_new_tokens=3)]
+    eng.submit_all(reqs)
+    assert all(r.done for r in reqs)
+    assert eng.stats["prefix_hits"] == 1
+    assert eng._req_key_cache == {}  # no leaked keys after the wave

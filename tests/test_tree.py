@@ -1,0 +1,260 @@
+"""Tree fingerprints (repro.hash.tree): split/chunking invariance, host-twin
+and D=1-vs-D=8 bit-identity, zero host syncs under trace, length-tag edge
+cases, pytree/checkpoint integration, and the theory bound's monotonicity."""
+import os
+import subprocess
+import sys
+import textwrap
+from fractions import Fraction
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import theory
+from repro.hash import fingerprint_bytes
+from repro.hash.tree import (TreeHasher, TreeSpec, default_tree_hasher,
+                             fingerprint_pytree, root_of_leaf_fingerprints,
+                             stream_tree)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RNG = np.random.Generator(np.random.Philox(key=np.uint64(0x7E3)))
+
+#: deterministic token stream shared with the golden pins below
+TOKS123 = (np.arange(123, dtype=np.uint32) * np.uint32(2654435761)) \
+    ^ np.uint32(0x9E37)
+
+
+@pytest.fixture(scope="module")
+def th8():
+    return TreeHasher(TreeSpec(leaf_words=8))
+
+
+# ---------------------------------------------------------------------------
+# golden values: the digest is a wire format -- a drift here is a
+# correctness event, same severity as a QUALITY.json statistic change
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tokens,want", [
+    (np.zeros(0, np.uint32), 0x21D2B472322CB1E9),
+    (np.zeros(1, np.uint32), 0xEB510147F276AD67),
+    (np.asarray([42], np.uint32), 0xC217AE8CF449D621),
+    (TOKS123[:8], 0x1C97D1D79E5B347D),
+    (TOKS123, 0x82F15E0BB5AF2B2B),
+])
+def test_golden_fingerprints(th8, tokens, want):
+    assert th8.fingerprint(tokens) == want
+    assert th8.digest_host(tokens) == want
+
+
+def test_golden_bytes(th8):
+    assert th8.fingerprint_bytes(b"abc") == 0x613539B287997EE7
+
+
+def test_empty_vs_single_zero_token_distinct(th8):
+    # both hash one all-zero leaf; only the length tag separates them
+    assert th8.fingerprint(np.zeros(0, np.uint32)) != \
+        th8.fingerprint(np.zeros(1, np.uint32))
+
+
+def test_trailing_zeros_distinct(th8):
+    t = TOKS123[:10]
+    padded = np.concatenate([t, np.zeros(3, np.uint32)])
+    assert th8.fingerprint(t) != th8.fingerprint(padded)
+
+
+def test_byte_pad_distinct(th8):
+    data = bytes(TOKS123[:9].tobytes())
+    assert th8.fingerprint_bytes(data) != th8.fingerprint_bytes(data + b"\0")
+
+
+# ---------------------------------------------------------------------------
+# invariance: same stream => same digest, regardless of chunking, leaf
+# bucketing, batch size, or device count
+# ---------------------------------------------------------------------------
+
+def test_stream_split_invariance(th8):
+    toks = RNG.integers(0, 2**32, size=731, dtype=np.uint64).astype(np.uint32)
+    want = th8.fingerprint(toks)
+    for trial in range(4):
+        s = th8.stream(leaf_batch=int(RNG.integers(1, 8)))
+        cuts = np.sort(RNG.integers(0, len(toks) + 1, size=6))
+        prev = 0
+        for c in list(cuts) + [len(toks)]:
+            s.update(toks[prev:c])
+            prev = c
+        assert s.digest_int() == want, trial
+
+
+def test_stream_digest_is_nondestructive(th8):
+    toks = RNG.integers(0, 2**32, size=100, dtype=np.uint64).astype(np.uint32)
+    s = th8.stream(leaf_batch=2)
+    s.update(toks[:57])
+    assert s.digest_int() == th8.fingerprint(toks[:57])
+    s.update(toks[57:])
+    assert s.digest_int() == th8.fingerprint(toks)
+
+
+def test_digest_tokens_bucketing_invariance(th8):
+    """The pure path must not see the zero-padding: any T >= n with the
+    same n_tokens digests identically (this is what lets the host surface
+    pow2-bucket its jit traces)."""
+    toks = RNG.integers(0, 2**32, size=53, dtype=np.uint64).astype(np.uint32)
+    base = np.asarray(th8.digest_tokens(jnp.asarray(toks)))
+    for T in (56, 64, 128):
+        buf = np.zeros(T, np.uint32)
+        buf[:53] = toks
+        got = np.asarray(th8.digest_tokens(jnp.asarray(buf), n_tokens=53))
+        np.testing.assert_array_equal(got, base)
+
+
+def test_fingerprint_matches_digest_tokens(th8):
+    toks = RNG.integers(0, 2**32, size=200, dtype=np.uint64).astype(np.uint32)
+    d = np.asarray(th8.digest_tokens(jnp.asarray(toks)))
+    assert ((int(d[0]) << 32) | int(d[1])) == th8.fingerprint(toks)
+
+
+def test_host_twin_bit_identity_sweep(th8):
+    for n in (0, 1, 2, 7, 8, 9, 15, 16, 17, 64, 65, 300):
+        toks = RNG.integers(0, 2**32, size=n, dtype=np.uint64).astype(np.uint32)
+        assert th8.fingerprint(toks) == th8.digest_host(toks), n
+
+
+def test_leaf_words_is_part_of_the_scheme():
+    toks = RNG.integers(0, 2**32, size=100, dtype=np.uint64).astype(np.uint32)
+    a = TreeHasher(TreeSpec(leaf_words=8)).fingerprint(toks)
+    b = TreeHasher(TreeSpec(leaf_words=16)).fingerprint(toks)
+    assert a != b  # different tree shape => different digests, by design
+
+
+# ---------------------------------------------------------------------------
+# purity: the jitted digest path must not touch the host
+# ---------------------------------------------------------------------------
+
+def test_digest_tokens_zero_host_syncs(th8):
+    toks = jnp.asarray(TOKS123)
+    jaxpr = str(jax.make_jaxpr(lambda t: th8.digest_tokens(t))(toks))
+    for bad in ("callback", "host_callback", "device_get", "infeed"):
+        assert bad not in jaxpr, f"host primitive {bad!r} in jaxpr"
+
+
+def test_digest_tokens_jit_composable(th8):
+    toks = jnp.asarray(TOKS123)
+    inner = jax.jit(lambda t: th8.digest_tokens(t))(toks)
+    np.testing.assert_array_equal(np.asarray(inner),
+                                  np.asarray(th8.digest_tokens(toks)))
+
+
+# ---------------------------------------------------------------------------
+# multi-device: 8 fake host devices in a subprocess, pinned golden
+# ---------------------------------------------------------------------------
+
+def test_d8_bit_identity_subprocess():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    code = """
+        import numpy as np, jax
+        from repro.hash.tree import TreeHasher, TreeSpec
+        from repro.parallel.sharding import data_mesh
+        mesh = data_mesh()
+        assert mesh.devices.size == 8, mesh.devices.size
+        th = TreeHasher(TreeSpec(leaf_words=8), mesh=mesh)
+        toks = (np.arange(123, dtype=np.uint32) * np.uint32(2654435761)) \\
+            ^ np.uint32(0x9E37)
+        # pinned against the D=1 golden in test_tree.py: the mesh must be
+        # invisible in the digest
+        assert th.fingerprint(toks) == 0x82F15E0BB5AF2B2B, \\
+            hex(th.fingerprint(toks))
+        rng = np.random.Generator(np.random.Philox(key=np.uint64(0x7E3)))
+        t2 = rng.integers(0, 2**32, size=731, dtype=np.uint64).astype(np.uint32)
+        assert th.fingerprint(t2) == th.digest_host(t2)
+        s = th.stream(leaf_batch=3)
+        for i in range(0, 731, 100):
+            s.update(t2[i : i + 100])
+        assert s.digest_int() == th.fingerprint(t2)
+        print("OK")
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# key schedule + theory bound
+# ---------------------------------------------------------------------------
+
+def test_fold_levels_use_distinct_keys(th8):
+    seen = {tuple(int(x) for x in th8.level_keys_u64(lv)) for lv in range(6)}
+    assert len(seen) == 6  # finalization + 5 fold levels, all distinct
+
+
+def test_fold_keys_independent_of_leaf_keys(th8):
+    leaf = set(map(int, th8.hasher._mkb.buffers[0].u64(64)))
+    fold = {int(x) for lv in range(6) for x in th8.level_keys_u64(lv)}
+    assert not (leaf & fold)
+
+
+def test_collision_bound_shape():
+    eps = theory.tree_eps_level()
+    assert eps == Fraction(1, 2**33)
+    assert theory.tree_depth(1) == 0
+    assert theory.tree_depth(2) == 1
+    assert theory.tree_depth(5) == 3
+    assert theory.tree_collision_bound(1) == 2 * eps
+    # monotone in leaf count, still tiny at a billion leaves
+    assert theory.tree_collision_bound(10**9) == (30 + 2) * eps
+    assert theory.tree_collision_bound(10**9) < Fraction(1, 2**27)
+
+
+# ---------------------------------------------------------------------------
+# consumers: pytree fingerprints, stream_tree, fingerprint_bytes routing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"w": np.arange(24, dtype=np.float32).reshape(4, 6),
+            "b": {"x": np.ones(5, np.int32), "y": np.float32(2.5)}}
+
+
+def test_fingerprint_pytree_deterministic_and_sensitive():
+    pf = fingerprint_pytree(_tree())
+    assert pf == fingerprint_pytree(_tree())
+    assert set(pf.leaf_map()) == {"w", "b/x", "b/y"}
+    changed = _tree()
+    changed["b"]["x"][0] = 7
+    pf2 = fingerprint_pytree(changed)
+    assert pf2.root != pf.root
+    assert pf2.leaf_map()["b/x"] != pf.leaf_map()["b/x"]
+    assert pf2.leaf_map()["w"] == pf.leaf_map()["w"]
+
+
+def test_pytree_root_covers_structure():
+    """Swapping two intact leaves changes the root even though the leaf
+    digest MULTISET is unchanged -- the root binds digests to paths."""
+    pf = fingerprint_pytree({"a": np.int32(1), "b": np.int32(2)})
+    sw = fingerprint_pytree({"a": np.int32(2), "b": np.int32(1)})
+    assert sorted(p for _, p in pf.leaves) == sorted(p for _, p in sw.leaves)
+    assert pf.root != sw.root
+    pairs = list(pf.leaves)
+    assert root_of_leaf_fingerprints(pairs) == pf.root
+    assert root_of_leaf_fingerprints(pairs[::-1]) != pf.root
+
+
+def test_stream_tree_and_bytes_routing():
+    data = (TOKS123 % 256).astype(np.uint8).tobytes()[:333]
+    th = default_tree_hasher()
+    assert fingerprint_bytes(data, tree=th) == th.fingerprint_bytes(data)
+    # the default (no tree) layout is untouched -- legacy bit-compat
+    assert fingerprint_bytes(b"abc") == 0xEB9E77C9EC64DBB2
+    s = stream_tree()
+    words = np.frombuffer(data + b"\0" * ((-len(data)) % 4), dtype="<u4")
+    s.update(words)
+    assert isinstance(s.digest_int(), int)
+
+
+def test_default_tree_hasher_cached():
+    assert default_tree_hasher() is default_tree_hasher()
+    assert default_tree_hasher(TreeSpec(leaf_words=32)) is not \
+        default_tree_hasher()
