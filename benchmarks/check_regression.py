@@ -45,15 +45,18 @@ import sys
 _SMOKE_MODULES = "kernels,multihash,hasher,tree,distributed"
 
 # hot-path rows gated by --max-regress: the COMPUTE-BOUND jit engine fast
-# paths whose regression would invalidate the paper-claim trajectory. The
-# host-sync/collective-bound rows (distributed/*) and the interpret
+# paths whose regression would invalidate the paper-claim trajectory, plus
+# the routed-transport admission rows (the default transport's collective
+# layout is a headline claim; its hostmod/ingraph siblings stay advisory).
+# Other host-sync/collective-bound rows (distributed/*) and the interpret
 # Python-exec rows swing multi-x on shared-core CPU runners and stay in
 # the non-blocking report. Prefix match.
 _GATE_PREFIXES = ("multihash/kscale/",
                   "multihash/bloom4096x9probe/fused-jnp",
                   "hasher_overhead/",
                   "tree/leaf_hash/",
-                  "tree/digest/")
+                  "tree/digest/",
+                  "distributed/bloom_admit/B4096/routed/")
 
 
 def perm_pvalue(base_logs: list, fresh_logs: list,

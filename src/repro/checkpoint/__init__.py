@@ -1,3 +1,5 @@
 """Checkpointing with Multilinear integrity fingerprints."""
 from . import checkpointer  # noqa: F401
-from .checkpointer import Checkpointer, CorruptCheckpointError  # noqa: F401
+from .checkpointer import (  # noqa: F401
+    Checkpointer, CorruptCheckpointError, UnsupportedManifestScheme,
+    migrate_legacy_manifest)

@@ -34,18 +34,29 @@ from ..hash.tree import default_tree_hasher, root_of_leaf_fingerprints
 # digests (hash.tree: one fused leaf launch per array instead of the old
 # serial per-chunk host loop) plus a pytree ROOT digest over (path, leaf_fp)
 # pairs, so a manifest edit that swaps two intact leaves is also caught.
-# Manifests without a "scheme" key are legacy streaming fingerprints and
-# keep verifying bit-for-bit.
+# The legacy "stream-v0" scheme (manifests without a "scheme" key) is
+# RETIRED: verify/restore raise `UnsupportedManifestScheme`; run
+# `migrate_legacy_manifest(step_dir)` once to upgrade in place.
 _SCHEME_TREE = "tree-v1"
 _SCHEME_LEGACY = "stream-v0"
+
+
+class UnsupportedManifestScheme(RuntimeError):
+    """The manifest's integrity scheme is no longer verifiable in-process.
+    `stream-v0` support was removed one release after `tree-v1` landed;
+    the bits on disk are fine -- upgrade the manifest offline with
+    `repro.checkpoint.migrate_legacy_manifest(step_dir)`."""
 
 
 def _leaf_fingerprint(arr: np.ndarray, scheme: str) -> int:
     """The integrity fingerprint of one stored array under `scheme` -- the
     single hashing helper both verify and restore go through."""
-    if scheme == _SCHEME_TREE:
-        return default_tree_hasher().fingerprint_bytes(arr.tobytes())
-    return fingerprint_bytes(arr.tobytes())
+    if scheme != _SCHEME_TREE:
+        raise UnsupportedManifestScheme(
+            f"manifest scheme {scheme!r} is retired; only {_SCHEME_TREE!r} "
+            "verifies. Upgrade once with "
+            "repro.checkpoint.migrate_legacy_manifest(<step_dir>)")
+    return default_tree_hasher().fingerprint_bytes(arr.tobytes())
 
 
 def _leaf_path(kp) -> str:
@@ -207,16 +218,34 @@ class Checkpointer:
                 if f"{root:016x}" != manifest["root"]:
                     return False
             return True
+        except UnsupportedManifestScheme:
+            # not mere corruption: the bits may be fine but this process
+            # cannot prove it -- surface the actionable error to verify()
+            # callers instead of a silent False
+            raise
         except Exception:
             return False
 
     def latest_valid(self) -> int | None:
         """Newest checkpoint whose every fingerprint verifies -- corrupt or
-        torn checkpoints (simulated node failure mid-write) are skipped."""
+        torn checkpoints (simulated node failure mid-write) are skipped.
+        Un-migrated legacy checkpoints are skipped too (resume must keep
+        working next to old debris), but only `migrate()` makes them
+        restorable again."""
         for s in reversed(self.steps()):
-            if self.verify(s):
-                return s
+            try:
+                if self.verify(s):
+                    return s
+            except UnsupportedManifestScheme:
+                continue
         return None
+
+    def migrate(self, step: int) -> bool:
+        """Upgrade one legacy checkpoint's manifest to tree-v1 in place
+        (see `migrate_legacy_manifest`); True if a rewrite happened."""
+        out = migrate_legacy_manifest(os.path.join(self.dir, f"step_{step}"))
+        self._verify_cache.pop(step, None)
+        return out
 
     def restore(self, step: int, like, mesh=None, fsdp_pods: bool = False):
         """Load into the structure of `like` (a state pytree or its specs).
@@ -255,3 +284,38 @@ class Checkpointer:
             else:
                 out.append(jnp.asarray(arr))
         return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def migrate_legacy_manifest(step_dir: str) -> bool:
+    """Offline one-shot upgrade of a legacy `stream-v0` checkpoint to
+    `tree-v1`: verify every leaf against its LEGACY streaming fingerprint
+    (migration must not launder corruption), recompute tree-v1 per-leaf
+    digests plus the pytree root, and atomically rewrite `manifest.json`.
+    Returns True if a rewrite happened, False if already tree-v1. Raises
+    `CorruptCheckpointError` if a legacy fingerprint does not match."""
+    mpath = os.path.join(step_dir, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    if manifest.get("scheme") == _SCHEME_TREE:
+        return False
+    data = np.load(os.path.join(step_dir, "arrays.npz"))
+    pairs = []
+    th = default_tree_hasher()
+    for leaf_path, meta in manifest["leaves"].items():
+        arr = data[meta["key"]]
+        legacy = fingerprint_bytes(arr.tobytes())
+        if f"{legacy:016x}" != meta["fingerprint"]:
+            raise CorruptCheckpointError(
+                f"{step_dir}: leaf {leaf_path!r} fails its legacy "
+                f"stream-v0 fingerprint (got {legacy:016x}, manifest "
+                f"{meta['fingerprint']}); refusing to migrate")
+        fp = th.fingerprint_bytes(arr.tobytes())
+        meta["fingerprint"] = f"{fp:016x}"
+        pairs.append((leaf_path, fp))
+    manifest["scheme"] = _SCHEME_TREE
+    manifest["root"] = f"{root_of_leaf_fingerprints(pairs):016x}"
+    tmp = mpath + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, mpath)
+    return True

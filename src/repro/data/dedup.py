@@ -104,10 +104,19 @@ class ExactDedup:
     (`repro.hash.distributed.ShardedHasher`): B/D rows hashed per device,
     bit-identical values, so admission decisions are unchanged. The seen-set
     itself stays host-side -- it is the sequential arrival-order authority.
+
+    With `approx_items=N` the host set is replaced by a
+    `DeviceShardedBloom` admission authority over `mesh` (default FP rate
+    1e-3, probes moved under `probe_transport` -- default "routed"): dedup
+    for corpora whose exact fingerprint set won't fit host memory.
+    Verdicts then carry Bloom semantics: a ~1e-3 false-duplicate rate, and
+    in-batch duplicates ALL admit (pre-batch-state contract) instead of
+    first-occurrence-wins.
     """
 
     def __init__(self, seed: int = 0xDED0, backend: str | None = None,
-                 mesh=None):
+                 mesh=None, approx_items: int | None = None,
+                 probe_transport="routed"):
         self.hasher = Hasher.from_spec(HashSpec(
             family="multilinear", n_hashes=1, out_bits=64,
             variable_length=True, seed=seed))
@@ -116,6 +125,13 @@ class ExactDedup:
         self._mesh = mesh
         self._sharded = self.hasher.sharded(mesh) if mesh is not None else None
         self._tree = None  # lazy: most corpora never hit the long path
+        self._bloom = None
+        if approx_items is not None:
+            from ..hash.distributed import DeviceShardedBloom  # lazy: cycle
+
+            self._bloom = DeviceShardedBloom(
+                n_items=int(approx_items), seed=seed ^ 0xB100, mesh=mesh,
+                probe_transport=probe_transport)
         self.seen: set[int] = set()
 
     def _fingerprints(self, items, backend=None) -> np.ndarray:
@@ -143,8 +159,15 @@ class ExactDedup:
         return self._admit(fps)
 
     def _admit(self, fps) -> np.ndarray:
-        """Arrival-order admission over precomputed fingerprints: first
-        occurrence (within the batch or vs history) wins."""
+        """Admission over precomputed fingerprints. Exact mode: arrival
+        order, first occurrence (within the batch or vs history) wins.
+        Approximate mode (`approx_items=`): the 64-bit fingerprints feed
+        the device-sharded Bloom authority as 2-word keys -- one fused
+        launch, pre-batch-state verdicts."""
+        if self._bloom is not None:
+            rows = [np.array([fp & 0xFFFFFFFF, fp >> 32], np.uint32)
+                    for fp in map(int, np.asarray(fps, np.uint64))]
+            return self._bloom.check_and_add_batch(rows)
         out = np.zeros(len(fps), bool)
         for i, fp in enumerate(map(int, fps)):
             if fp not in self.seen:

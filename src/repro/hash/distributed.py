@@ -22,11 +22,21 @@ splits uniformly by construction):
   accounting uses the Lemire `(h*n)>>32` reduction from
   `repro.hash.sharding`.
 
-Collective layout (DESIGN.md section 7): `add` is one fused launch with one
-probe all_gather (zero psums, ZERO host syncs), `contains` and the fused
-`check_and_add_batch` admission are one launch + one all_gather + one psum.
+How probes move between devices is a first-class `ProbeTransport` spec
+(DESIGN.md section 7).  The default `"routed"` transport buckets each
+device's (B/D, k) probe indices by owning bit range and exchanges ONLY the
+owned probes with one `jax.lax.all_to_all` (~1/D the bytes of the
+`"all_gather"` transport, which replicates the full (B, k) matrix);
+`"host"` replays the legacy per-batch host round-trip.  All three are
+bit-identical to the single-device `BloomFilter` -- the transport moves
+the same global probe set, never changes it.  Collective layout: `add` is
+one fused launch with zero psums and ZERO host syncs; `contains` and the
+fused `check_and_add_batch` admission add exactly ONE psum.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +63,84 @@ def _bucket_shape(B: int, N: int, D: int) -> "tuple[int, int]":
     from ..kernels.autotune import pow2_at_least
 
     return D * pow2_at_least(max(1, -(-B // D))), pow2_at_least(max(N, 1))
+
+
+class ProbeBucketOverflow(RuntimeError):
+    """A routed probe exchange overflowed its static per-destination bucket
+    capacity (raised only under `ProbeTransport(on_overflow="error")`; the
+    default policy falls back to the all_gather transport instead).  The
+    filter state is ALWAYS repaired before this raises -- decisions already
+    returned and bits already set remain bit-identical to `BloomFilter`."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeTransport:
+    """How `DeviceShardedBloom` moves probe indices between devices.
+
+    kinds (all three bit-identical to the single-device `BloomFilter`):
+      "routed"      default -- bucket each device's (B/D, k) probes by owning
+                    bit range and exchange ONLY owned probes with one
+                    `jax.lax.all_to_all` (~capacity_factor/D the bytes of
+                    all_gather); per-item verdicts come back via ONE psum of
+                    scatter-added miss counts keyed by global row id.
+      "all_gather"  replicate the full (B, k) probe matrix to every device
+                    (the PR 5 layout; what `in_graph_mod=True` meant).
+      "host"        legacy per-batch host round-trip: hash_batch -> numpy
+                    `h % m` -> replicated operand (`in_graph_mod=False`).
+
+    Bucket capacity is static (jit needs fixed shapes): each destination
+    receives at most `capacity(P, D)` of a device's P = (B/D)*k probes.
+    Strong universality spreads probes uniformly over owners, so the
+    expected load is P/D and `capacity_factor` is the safety headroom; the
+    tail risk is handled, not ignored -- overflow is detected in-graph
+    (truncated probes raise a per-device flag) and `on_overflow` picks the
+    recovery: "fallback" replays the batch through the all_gather surface
+    (bit-identical, counted in `stats["overflow_fallbacks"]`), "error"
+    repairs the filter the same way and then raises `ProbeBucketOverflow`.
+    """
+
+    kind: str = "routed"
+    capacity_factor: float = 1.25
+    capacity_slack: int = 16
+    on_overflow: str = "fallback"
+
+    _KINDS = ("host", "all_gather", "routed")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(
+                f"probe_transport kind {self.kind!r} not in {self._KINDS}")
+        if self.on_overflow not in ("fallback", "error"):
+            raise ValueError(
+                f"on_overflow {self.on_overflow!r} not in "
+                "('fallback', 'error')")
+        if not (self.capacity_factor > 0):
+            raise ValueError("capacity_factor must be > 0")
+        if self.capacity_slack < 0:
+            raise ValueError("capacity_slack must be >= 0")
+
+    @classmethod
+    def of(cls, value) -> "ProbeTransport":
+        """Resolve the constructor spec: a kind string or an instance."""
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls(kind=value)
+        raise TypeError(
+            f"probe_transport must be a str or ProbeTransport, got "
+            f"{type(value).__name__}")
+
+    def capacity(self, n_probes: int, n_devices: int) -> int:
+        """Static per-destination bucket capacity for a device's `n_probes`
+        probes over `n_devices` owners. Clamped to n_probes (a bucket can
+        never need more), so with the default factor >= 1 a 1-device mesh
+        is structurally overflow-free; a deliberately tiny factor can still
+        overflow anywhere -- that is the chaos-test knob."""
+        cap = -(-int(n_probes * self.capacity_factor) // n_devices)
+        return max(1, min(int(n_probes), cap + self.capacity_slack))
+
+
+_UNSET = object()  # sentinel: distinguishes in_graph_mod=absent from =True
 
 
 class ShardedHasher:
@@ -271,35 +359,61 @@ class DeviceShardedBloom:
 
     Probe indices are computed IN-GRAPH: each device hashes its B/D rows
     and reduces the (hi, lo) accumulator limbs mod m with the Barrett digit
-    reduction (`limbs.mod_u64`, exact for every 32-bit m -- DESIGN.md §2),
-    then the (B, k) int32 probe indices all_gather along the data axis so
-    every device can test/scatter its owned bit range. The all_gather is
-    the same (B, k) transfer the previous implementation bounced through
-    the host (sync + device->host->device per batch), now a device-to-device
-    collective inside the launch: admission never leaves the device.
+    reduction (`limbs.mod_u64`, exact for every 32-bit m -- DESIGN.md §2).
+    How the resulting (B/D, k) int32 global indices reach the devices that
+    OWN those bits is the `probe_transport` spec (`ProbeTransport`): the
+    default `"routed"` transport buckets them by owner (`g // m_local` --
+    the contiguous-range twin of the Lemire `(h*n)>>32` owner reduction,
+    over the padded bit domain) and exchanges only owned probes with one
+    `jax.lax.all_to_all`; `"all_gather"` replicates the full (B, k) matrix
+    (the PR 5 layout); `"host"` replays the legacy per-batch host
+    round-trip. Admission never leaves the device on either in-graph
+    transport.
 
-    Collective layout:
-      add_batch             one launch, one all_gather, ZERO psums and ZERO
-                            host syncs (each device scatters only into its
-                            owned range; foreign probes drop)
-      contains_batch        one launch, one all_gather + ONE psum
-                            (per-device miss counts)
-      check_and_add_batch   one fused launch, one all_gather + ONE psum
+    Collective layout (per-transport bytes table in DESIGN.md §7):
+      add_batch             one launch, one collective, ZERO psums and ZERO
+                            host syncs (each device scatters only its owned
+                            range; foreign/sentinel probes drop)
+      contains_batch        one launch, one collective + ONE psum (routed:
+                            miss counts scatter-added by global row id;
+                            all_gather: per-device miss counts)
+      check_and_add_batch   one fused launch, one collective + ONE psum
                             (verdicts against the pre-batch state, scatter)
     Item -> home-shard routing (`owner_shards`) uses the existing Lemire
     `(h*n)>>32` reduction from `repro.hash.sharding` for multi-host admission
     planning; probe ownership itself is the contiguous range map above.
 
-    `in_graph_mod=False` restores the legacy host round-trip probe path
-    (hash_batch -> numpy `h % m` -> replicated operand) -- kept as the
-    decision-identity A/B reference and the benchmark baseline; both paths
-    are bit-identical to the single-device `BloomFilter` by construction.
+    Routed bucket overflow (static capacity, see `ProbeTransport`): add
+    launches stay zero-sync by deferring the flag read -- the batch is
+    queued and the flags of up to `_settle_every` pending adds materialize
+    together at the next verdict-returning call (or `bits` read). Truncated
+    scatters only ever light a SUBSET of the correct bits, so recovery is a
+    replay of the overflowed batches through the all_gather surface: bit
+    union makes the repair exact, no snapshot needed.
+
+    `in_graph_mod=` is DEPRECATED (one-warning shim): True meant
+    `probe_transport="all_gather"`, False the `"host"` round-trip -- the
+    latter kept as the decision-identity A/B reference and bench baseline;
+    every transport is bit-identical to the single-device `BloomFilter` by
+    construction.
     """
+
+    _settle_every = 8  # max deferred routed adds before flags materialize
 
     def __init__(self, n_items: int, fp_rate: float = 1e-3, seed: int = 0xB100,
                  mesh: Mesh | None = None, axis: str = "data",
-                 in_graph_mod: bool = True):
+                 in_graph_mod=_UNSET,
+                 probe_transport: "ProbeTransport | str" = "routed"):
         import math
+
+        if in_graph_mod is not _UNSET:
+            warnings.warn(
+                "DeviceShardedBloom(in_graph_mod=...) is deprecated; pass "
+                "probe_transport='all_gather' (was True) or 'host' (was "
+                "False) -- see repro.hash.distributed.ProbeTransport",
+                DeprecationWarning, stacklevel=2)
+            probe_transport = "all_gather" if in_graph_mod else "host"
+        self.transport = ProbeTransport.of(probe_transport)
 
         # same sizing as data.dedup.BloomFilter -- decision identity needs
         # identical (m, k) for identical inputs
@@ -312,15 +426,17 @@ class DeviceShardedBloom:
             family="multilinear", n_hashes=self.k, out_bits=64,
             variable_length=True, seed=seed)), mesh, axis)
         self.mesh, self.axis = self.sharded.mesh, self.sharded.axis
-        self.in_graph_mod = bool(in_graph_mod)
         self.plan = limbs.ModPlan.for_modulus(self.m)
         D = self.sharded.n_shards
         self.m_local = -(-self.m // D)
         m_pad = self.m_local * D
         sharding = NamedSharding(self.mesh, P(self.axis))
-        self.bits = jax.device_put(jnp.zeros(m_pad, U8), sharding)
+        self._bits = jax.device_put(jnp.zeros(m_pad, U8), sharding)
+        self._pending: list = []  # routed adds with unread overflow flags
+        self.stats = {"overflow_fallbacks": 0}
 
         m_local, ax, plan = self.m_local, self.axis, self.plan
+        transport = self.transport
 
         def _local(g):
             """Global probe index -> (local index, owned mask) with foreign
@@ -369,6 +485,105 @@ class DeviceShardedBloom:
         def admit_body_dev(bits, hs, toks, lens, valid):
             return admit_body(bits, _probes_in_graph(hs, toks, lens, valid))
 
+        # -- routed transport: owner-bucketed all_to_all probe exchange ----
+
+        def _route(hs, toks, lens, valid):
+            """Bucket this device's (b, k) probes by owning device and
+            exchange only owned probes: (recv_g, recv_row, overflow, b).
+
+            Each probe g is owned by device `g // m_local` -- over the
+            padded bit domain m_pad = m_local*D this IS the Lemire
+            multiply-shift `(g*D) >> log2-range` owner reduction that
+            `owner_shards` uses, specialized to the contiguous range map.
+            Probes pack into a static (D, cap, 2) int32 send buffer of
+            (global index, sender-local row) pairs. Compaction is
+            SCATTER-FREE (CPU scatters serialize; this pack used to cost
+            as much as the exchange): a transposed per-destination running
+            count (cumsum along the contiguous axis), then a vectorized
+            binary search -- bucket d's j-th slot holds the first flat
+            probe index whose running count reaches j+1 -- so slots fill
+            first-fit in flat-index order and every buffer builds from
+            gathers alone. The -1 sentinel fills unused capacity and
+            carries invalid rows (their local-row word is the b sentinel);
+            sentinel probes route to the out-of-range bucket D (HIGH,
+            never negative: a negative bucket would wrap and alias real
+            buckets). One tiled `all_to_all` then swaps bucket d to device
+            d -- first-fit order guarantees each received bucket's rows
+            are non-decreasing with the sentinel tail last, which is what
+            lets `_miss_rt` reduce per-row misses without a scatter.
+            Probes beyond `cap` never pack and raise the per-device
+            overflow flag -- the host-side settle path repairs via
+            all_gather."""
+            g = hs.probe_indices(toks, plan, lens).astype(I32)
+            g = jnp.where(valid[:, None], g, I32(-1))
+            b, k = g.shape
+            n_probes = b * k
+            cap = transport.capacity(n_probes, D)
+            gf = g.reshape(n_probes)
+            dest = jnp.where(gf >= 0, gf // I32(m_local), I32(D))
+            onehot = dest[None, :] == jnp.arange(D, dtype=I32)[:, None]
+            pos = jnp.cumsum(onehot.astype(I32), axis=1)  # (D, n) running
+            counts = pos[:, -1]
+            overflow = jnp.any(counts > cap)
+            si = jax.vmap(lambda c: jnp.searchsorted(
+                c, jnp.arange(cap, dtype=I32) + 1))(pos)
+            ok = jnp.arange(cap, dtype=I32)[None, :] < counts[:, None]
+            sg = jnp.where(ok, gf[jnp.clip(si, 0, n_probes - 1)], I32(-1))
+            sr = jnp.where(ok, si.astype(I32) // I32(k), I32(b))
+            recv = jax.lax.all_to_all(
+                jnp.stack([sg, sr], axis=-1), ax,
+                split_axis=0, concat_axis=0, tiled=True)
+            return recv[..., 0], recv[..., 1], overflow, b
+
+        def _scatter_rt(bits, recv_g):
+            """Set every received owned bit; sentinel (-1) and any stray
+            foreign index clamp to the drop slot m_local (mode="drop")."""
+            loc = recv_g - jax.lax.axis_index(ax) * m_local
+            ok = (recv_g >= 0) & (loc >= 0) & (loc < m_local)
+            return bits.at[jnp.where(ok, loc, m_local).ravel()].set(
+                U8(1), mode="drop")
+
+        def _miss_rt(bits, recv_g, recv_row, b):
+            """(Bp,) global miss counts: test received owned probes locally,
+            total per-row misses, ONE psum across devices. A row's total
+            miss count is 0 iff all k of its global bits are set --
+            identical verdict to the all_gather membership test even when
+            duplicate probe indices land in one bucket.
+
+            The per-row reduction is scatter-free: `_route`'s first-fit
+            pack means bucket s arrives with non-decreasing sender-local
+            rows (sentinel b in the tail), so each row's misses are one
+            contiguous run -- an exclusive prefix sum per bucket plus a
+            vectorized binary search for the run edges turns the reduction
+            into pure gathers, and block s's (b,) counts land at global
+            rows [s*b, (s+1)*b) by plain reshape (device s only ever sends
+            its own rows)."""
+            loc = recv_g - jax.lax.axis_index(ax) * m_local
+            ok = (recv_g >= 0) & (loc >= 0) & (loc < m_local)
+            probe = jnp.where(ok, bits[jnp.clip(loc, 0, m_local - 1)], U8(1))
+            miss = (ok & (probe == 0)).astype(I32)  # (D, cap)
+            cs = jnp.concatenate(
+                [jnp.zeros((D, 1), I32), jnp.cumsum(miss, axis=1)], axis=1)
+            edges = jax.vmap(lambda r: jnp.searchsorted(
+                r, jnp.arange(b + 1, dtype=I32)))(recv_row)
+            blk = jnp.arange(D, dtype=I32)[:, None]
+            counts = cs[blk, edges[:, 1:]] - cs[blk, edges[:, :-1]]
+            return jax.lax.psum(counts.reshape(b * D), ax)
+
+        def add_body_rt(bits, hs, toks, lens, valid):
+            recv_g, _, overflow, _ = _route(hs, toks, lens, valid)
+            return _scatter_rt(bits, recv_g), overflow[None]
+
+        def contains_body_rt(bits, hs, toks, lens, valid):
+            recv_g, recv_row, overflow, b = _route(hs, toks, lens, valid)
+            present = _miss_rt(bits, recv_g, recv_row, b) == 0
+            return present, overflow[None]
+
+        def admit_body_rt(bits, hs, toks, lens, valid):
+            recv_g, recv_row, overflow, b = _route(hs, toks, lens, valid)
+            present = _miss_rt(bits, recv_g, recv_row, b) == 0
+            return _scatter_rt(bits, recv_g), ~present, overflow[None]
+
         sm = lambda body, out_specs: jax.jit(shard_map(  # noqa: E731
             body, mesh=self.mesh, in_specs=(P(self.axis), P()),
             out_specs=out_specs, check_rep=False))
@@ -385,13 +600,60 @@ class DeviceShardedBloom:
         self._add_dev = smg(add_body_dev, P(self.axis))
         self._contains_dev = smg(contains_body_dev, P())
         self._admit_dev = smg(admit_body_dev, (P(self.axis), P()))
+        # routed surfaces: same operand layout; overflow flags come back
+        # per-device (out_spec P(axis) over a (1,) bool) so reading them
+        # never adds a collective to the launch.
+        self._add_rt = smg(add_body_rt, (P(self.axis), P(self.axis)))
+        self._contains_rt = smg(contains_body_rt, (P(), P(self.axis)))
+        self._admit_rt = smg(
+            admit_body_rt, (P(self.axis), P(), P(self.axis)))
 
     @property
     def n_shards(self) -> int:
         return self.sharded.n_shards
 
+    @property
+    def in_graph_mod(self) -> bool:
+        """Deprecated read-only view of the old boolean flag: True for any
+        in-graph transport, False only for the legacy host round-trip."""
+        return self.transport.kind != "host"
+
+    @property
+    def bits(self) -> jnp.ndarray:
+        """The (m_local * D,) uint8 global bit array (device-sharded). A
+        read settles any pending routed adds first, so observers always see
+        repaired, `BloomFilter`-identical state."""
+        self._settle()
+        return self._bits
+
+    def _settle(self) -> None:
+        """Materialize the overflow flags of pending routed adds. Batches
+        whose flag fired were truncated -- their scatters lit a SUBSET of
+        the correct bits -- so replay exactly those through the all_gather
+        surface (bit union repairs in place; adds already fully applied are
+        untouched). Under `on_overflow="error"` the repair still runs, then
+        the typed error surfaces the capacity misconfiguration."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        replay = [staged for flag, staged in pending
+                  if bool(np.asarray(flag).any())]
+        if not replay:
+            return
+        self.stats["overflow_fallbacks"] += len(replay)
+        for toks, lens, valid in replay:
+            self._bits = self._add_dev(
+                self._bits, self.sharded.hasher, toks, lens, valid)
+        if self.transport.on_overflow == "error":
+            raise ProbeBucketOverflow(
+                f"{len(replay)} routed add batch(es) overflowed the static "
+                f"bucket capacity (capacity_factor="
+                f"{self.transport.capacity_factor}); state repaired via "
+                "all_gather replay -- raise capacity_factor/capacity_slack "
+                "or use probe_transport='all_gather'")
+
     def _probes(self, items) -> np.ndarray:
-        """LEGACY host round-trip path (`in_graph_mod=False`): (B, k) int32
+        """LEGACY host round-trip path (`probe_transport="host"`): (B, k) int32
         GLOBAL probe indices -- the full 64-bit accumulators mod m, exactly
         the single-device `BloomFilter` formula, hashed B/D rows per device
         then reduced with numpy's `%` on host. Bit-identical to the in-graph
@@ -432,28 +694,50 @@ class DeviceShardedBloom:
 
     def add_batch(self, items) -> None:
         """Admit a batch in ONE fused launch: hash + Barrett mod + probe
-        all_gather + owned-range scatter, all in-graph -- zero psums and
-        ZERO host syncs (the legacy path instead syncs on `_probes`)."""
+        exchange + owned-range scatter, all in-graph -- zero psums and
+        ZERO host syncs (the routed overflow flag is deferred to the next
+        settle point; the legacy host transport instead syncs on
+        `_probes`)."""
         if len(items) == 0:
             return
-        if not self.in_graph_mod:
-            self.bits = self._add(self.bits, jnp.asarray(self._probes(items)))
+        kind = self.transport.kind
+        if kind == "host":
+            self._bits = self._add(
+                self._bits, jnp.asarray(self._probes(items)))
             return
         toks, lens, valid, _ = self._stage(items)
-        self.bits = self._add_dev(
-            self.bits, self.sharded.hasher, toks, lens, valid)
+        if kind == "all_gather":
+            self._bits = self._add_dev(
+                self._bits, self.sharded.hasher, toks, lens, valid)
+            return
+        self._bits, flag = self._add_rt(
+            self._bits, self.sharded.hasher, toks, lens, valid)
+        self._pending.append((flag, (toks, lens, valid)))
+        if len(self._pending) >= self._settle_every:
+            self._settle()
 
     def contains_batch(self, items) -> np.ndarray:
-        """(B,) bool membership -- one fused launch, one all_gather + one
-        psum; the only host transfer is the final (B,) verdict read."""
+        """(B,) bool membership -- one fused launch, one collective + one
+        psum; the only host transfer is the final (B,) verdict read (the
+        routed overflow flag rides in the same transfer)."""
         if len(items) == 0:
             return np.zeros(0, bool)
-        if not self.in_graph_mod:
+        kind = self.transport.kind
+        if kind == "host":
             return np.asarray(
-                self._contains(self.bits, jnp.asarray(self._probes(items))))
+                self._contains(self._bits, jnp.asarray(self._probes(items))))
+        self._settle()
         toks, lens, valid, B = self._stage(items)
-        return np.asarray(self._contains_dev(
-            self.bits, self.sharded.hasher, toks, lens, valid))[:B]
+        if kind == "all_gather":
+            return np.asarray(self._contains_dev(
+                self._bits, self.sharded.hasher, toks, lens, valid))[:B]
+        verdict, flag = self._contains_rt(
+            self._bits, self.sharded.hasher, toks, lens, valid)
+        if bool(np.asarray(flag).any()):
+            self._overflowed("contains_batch")
+            verdict = self._contains_dev(
+                self._bits, self.sharded.hasher, toks, lens, valid)
+        return np.asarray(verdict)[:B]
 
     def check_and_add_batch(self, items) -> np.ndarray:
         """(B,) admission mask in ONE fused launch + ONE psum: True where
@@ -463,14 +747,36 @@ class DeviceShardedBloom:
         sub-batch when arrival-order dedup inside a batch matters)."""
         if len(items) == 0:
             return np.zeros(0, bool)
-        if not self.in_graph_mod:
-            self.bits, admitted = self._admit(
-                self.bits, jnp.asarray(self._probes(items)))
+        kind = self.transport.kind
+        if kind == "host":
+            self._bits, admitted = self._admit(
+                self._bits, jnp.asarray(self._probes(items)))
             return np.asarray(admitted)
+        self._settle()
         toks, lens, valid, B = self._stage(items)
-        self.bits, admitted = self._admit_dev(
-            self.bits, self.sharded.hasher, toks, lens, valid)
+        if kind == "all_gather":
+            self._bits, admitted = self._admit_dev(
+                self._bits, self.sharded.hasher, toks, lens, valid)
+            return np.asarray(admitted)[:B]
+        new_bits, admitted, flag = self._admit_rt(
+            self._bits, self.sharded.hasher, toks, lens, valid)
+        if bool(np.asarray(flag).any()):
+            # truncated exchange: discard the partial scatter/verdicts and
+            # rerun against the untouched pre-call bits via all_gather
+            self._overflowed("check_and_add_batch")
+            new_bits, admitted = self._admit_dev(
+                self._bits, self.sharded.hasher, toks, lens, valid)
+        self._bits = new_bits
         return np.asarray(admitted)[:B]
+
+    def _overflowed(self, op: str) -> None:
+        self.stats["overflow_fallbacks"] += 1
+        if self.transport.on_overflow == "error":
+            raise ProbeBucketOverflow(
+                f"routed {op} overflowed the static bucket capacity "
+                f"(capacity_factor={self.transport.capacity_factor}); the "
+                "filter state is unchanged -- raise capacity_factor/"
+                "capacity_slack or use probe_transport='all_gather'")
 
     def add(self, item) -> None:
         self.add_batch([np.atleast_1d(item)])
@@ -534,14 +840,29 @@ class FilterShardBackend:
         return reply
 
 
-def bloom_shard_backends(n_shards: int, n_items: int, fp_rate: float = 1e-3,
-                         seed: int = 0xB100) -> "list[FilterShardBackend]":
+def bloom_shard_backends(
+        n_shards: int, n_items: int, fp_rate: float = 1e-3,
+        seed: int = 0xB100, *, mesh: Mesh | None = None,
+        probe_transport: "ProbeTransport | str" = "routed",
+) -> "list[FilterShardBackend]":
     """`n_shards` keyspace-partitioned Bloom backends for the admission
     service (each shard's filter sized for its 1/n share of the items; the
-    service's Lemire routing keeps loads uniform by strong universality)."""
+    service's Lemire routing keeps loads uniform by strong universality).
+
+    With `mesh=` each shard's filter is a `DeviceShardedBloom` whose bits
+    range-partition over the mesh data axis under the given
+    `probe_transport` (default "routed"); verdicts are then against the
+    pre-batch state (the batched contract) instead of the host filter's
+    arrival order -- the service's per-shard batching makes both orders
+    converge to the same filter state."""
+    per = max(1, -(-int(n_items) // int(n_shards)))
+    if mesh is not None:
+        return [FilterShardBackend(DeviceShardedBloom(
+                    n_items=per, fp_rate=fp_rate, seed=seed, mesh=mesh,
+                    probe_transport=probe_transport))
+                for _ in range(int(n_shards))]
     from ..data.dedup import BloomFilter
 
-    per = max(1, -(-int(n_items) // int(n_shards)))
     return [FilterShardBackend(BloomFilter(n_items=per, fp_rate=fp_rate,
                                            seed=seed))
             for _ in range(int(n_shards))]

@@ -134,6 +134,8 @@ class TreeHasher:
                                initial=FOLD_WORDS * 8)
         self._level_cache: dict[int, tuple] = {}
         self._jit = jax.jit(self._digest_impl)
+        self._fold_jit = jax.jit(self._fold_impl)
+        self._leaf_jit = jax.jit(lambda hs, rows: hs(rows))
 
     # -- fold key schedule ---------------------------------------------------
 
@@ -173,6 +175,15 @@ class TreeHasher:
         hi, lo = self._leaf_limbs(toks.reshape(T // lw, lw))
         # real (non-padding) nodes occupy a prefix; t tracks its length
         t = jnp.maximum(I32(1), (n + I32(lw - 1)) // I32(lw))
+        return self._fold_impl(hi, lo, t, tag_lo, tag_hi)
+
+    def _fold_impl(self, hi, lo, t, tag_lo, tag_hi):
+        """Logarithmic pairwise fold + root finalization over (L,) (hi, lo)
+        leaf-digest limbs: real nodes occupy the `t`-prefix (t may be
+        traced); pad content past it never reaches a real node. Pure JAX;
+        shared by the one-shot digest and the stream's on-device fold tail
+        (`_fold_jit`)."""
+        t = jnp.asarray(t, I32)
         level = 1
         while hi.shape[0] > 1:
             if hi.shape[0] % 2:
@@ -314,6 +325,11 @@ class TreeStream:
     leaf digest (1/(4*leaf_words) of the input).  Complete leaves are
     flushed through the fused engine launch `leaf_batch` at a time, so
     absorption stays one launch per ~`leaf_batch * leaf_words` tokens.
+    Finished digests LIVE ON DEVICE and the fold tail runs there too
+    (`TreeHasher._fold_jit`): flush launches stay asynchronous and
+    finalization reads back one (2,) root instead of round-tripping every
+    digest through host numpy (`_fold_host` remains the pinned hostref
+    twin via `digest_host`).
     """
 
     def __init__(self, hasher: TreeHasher, leaf_batch: int = 1024):
@@ -324,7 +340,7 @@ class TreeStream:
         self._lw = hasher.spec.leaf_words
         self._parts: list[np.ndarray] = []   # buffered, not yet full leaves
         self._nbuf = 0                       # tokens across _parts
-        self._digests: list[np.ndarray] = []  # (c,) uint64 per flush
+        self._digests: list = []  # (c, 2) uint32 DEVICE (hi, lo) per flush
         self.total = 0                       # tokens absorbed overall
 
     def update(self, tokens) -> "TreeStream":
@@ -338,14 +354,27 @@ class TreeStream:
             self._flush()
         return self
 
-    def _leaf_digests(self, rows: np.ndarray) -> np.ndarray:
-        """(c, leaf_words) -> (c,) uint64 via the fused engine launch
-        (sharded when the TreeHasher has a mesh) -- bit-identical to the
-        in-graph leaf pass, per the engine's backend-identity contract."""
+    def _leaf_digests(self, rows: np.ndarray):
+        """(c, leaf_words) -> (c, 2) uint32 (hi, lo) leaf digests ON
+        DEVICE via the fused engine launch (sharded when the TreeHasher
+        has a mesh; pow2 row bucketing for bounded traces) -- bit-identical
+        to the in-graph leaf pass, per the engine's backend-identity
+        contract. The array is left on device, dispatch still in flight:
+        the fold tail (`digest_int`) consumes it in-graph, so digests
+        never round-trip through host numpy."""
+        from ..kernels.autotune import pow2_at_least
+
         th = self.hasher
+        c, lw = rows.shape
+        cp = pow2_at_least(max(1, c))
+        if cp != c:
+            rows = np.concatenate(
+                [rows, np.zeros((cp - c, lw), np.uint32)])
         if th.sharded is not None:
-            return th.sharded.hash_batch(rows)[:, 0]
-        return th.hasher.hash_batch(rows)[:, 0]
+            out = th.sharded(jnp.asarray(rows))
+        else:
+            out = th._leaf_jit(th.hasher, jnp.asarray(rows))
+        return out[:c, 0, :]
 
     def _flush(self, final: bool = False) -> None:
         buf = (np.concatenate(self._parts) if self._parts
@@ -366,16 +395,30 @@ class TreeStream:
         self._nbuf = len(rest)
 
     def digest_int(self) -> int:
-        """Finalize (non-destructively) to the 64-bit root fingerprint."""
+        """Finalize (non-destructively) to the 64-bit root fingerprint:
+        concatenate the device-resident leaf digests, pow2-pad the leaf
+        count (pad nodes sit past the true count `t`, so the fold's
+        promote rule never touches them), run the jitted on-device fold,
+        and read back one (2,) root -- the only host transfer."""
+        from ..kernels.autotune import pow2_at_least
+
         parts, nbuf = list(self._parts), self._nbuf
         digests = list(self._digests)
         self._flush(final=True)
-        digs = (np.concatenate(self._digests) if self._digests
-                else np.zeros(0, np.uint64))
-        out = self.hasher._fold_host(digs, self.total)
+        th = self.hasher
+        dev = (jnp.concatenate(self._digests, axis=0)
+               if len(self._digests) > 1 else self._digests[0])
+        n_leaves = dev.shape[0]
+        lp = pow2_at_least(n_leaves)
+        if lp != n_leaves:
+            dev = jnp.concatenate([dev, jnp.zeros((lp - n_leaves, 2), U32)])
+        tag = self.total
+        out = np.asarray(th._fold_jit(
+            dev[:, 0], dev[:, 1], np.int32(n_leaves),
+            np.uint32(tag & 0xFFFFFFFF), np.uint32(tag >> 32)))
         # restore: digest() must not change what a later update() absorbs
         self._parts, self._nbuf, self._digests = parts, nbuf, digests
-        return out
+        return (int(out[0]) << 32) | int(out[1])
 
 
 def stream_tree(spec: TreeSpec = TreeSpec(), *, mesh=None,

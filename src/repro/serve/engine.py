@@ -37,6 +37,8 @@ class Request:
 class ServeEngine:
     def __init__(self, api, params, *, n_slots: int = 4, max_seq: int = 256,
                  greedy: bool = True, mesh=None, admission=None,
+                 admission_items: int | None = None,
+                 probe_transport="routed",
                  tree_prompt_words: int = 1 << 12):
         self.api = api
         self.params = params
@@ -70,7 +72,18 @@ class ServeEngine:
         self.caches = api.init_caches(n_slots, max_seq)
         # optional fault-tolerant front door (repro.hash.service): duplicate
         # prompts are rejected before they cost a prefill; the engine keeps
-        # serving through backend outages (DESIGN.md §8)
+        # serving through backend outages (DESIGN.md §8). `admission_items=`
+        # builds one in-process: a single L2 shard whose filter is a
+        # DeviceShardedBloom over the engine's mesh, probes moved under
+        # `probe_transport` (default "routed" -- one all_to_all per wave).
+        if admission is None and admission_items is not None:
+            from ..hash.service import AdmissionService
+            from ..parallel.sharding import data_mesh
+
+            admission = AdmissionService.over_bloom_shards(
+                1, int(admission_items),
+                mesh=data_mesh() if mesh is None else mesh,
+                probe_transport=probe_transport)
         self.admission = admission
         self.stats = {"prefix_hits": 0, "prefills": 0, "ticks": 0,
                       "degraded_ticks": 0, "l1_only_admits": 0,

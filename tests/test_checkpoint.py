@@ -203,54 +203,90 @@ def test_root_digest_catches_manifest_leaf_swap(tmp_path):
     assert not ck.verify(1)
 
 
-def test_legacy_manifest_still_verifies(tmp_path):
-    """Pre-tree checkpoints (no "scheme" key, streaming fingerprints) must
-    keep verifying and restoring bit-for-bit -- and keep detecting
-    corruption -- for one release."""
+def _legacy_rewrite(step: str) -> None:
+    """Rewrite a committed step dir as a legacy stream-v0 checkpoint:
+    streaming fingerprints, no scheme/root keys."""
     from repro.hash import fingerprint_bytes
+
+    with open(os.path.join(step, "manifest.json")) as f:
+        man = json.load(f)
+    data = np.load(os.path.join(step, "arrays.npz"))
+    man.pop("scheme"); man.pop("root")
+    for path, meta in man["leaves"].items():
+        meta["fingerprint"] = \
+            f"{fingerprint_bytes(data[meta['key']].tobytes()):016x}"
+    with open(os.path.join(step, "manifest.json"), "w") as f:
+        json.dump(man, f)
+
+
+def test_legacy_manifest_raises_typed_error_and_migrates(tmp_path):
+    """stream-v0 is retired: verify/restore raise `UnsupportedManifestScheme`
+    (pointing at the migration helper, never a silent False), latest_valid
+    skips the un-migrated checkpoint, and one `migrate()` round-trips it
+    back to fully verifiable tree-v1 -- bit-identical restore."""
+    from repro.checkpoint import UnsupportedManifestScheme
 
     ck = Checkpointer(str(tmp_path))
     st = _state()
     ck.save(1, st)
-    step = os.path.join(str(tmp_path), "step_1")
-    with open(os.path.join(step, "manifest.json")) as f:
-        man = json.load(f)
-    # rewrite as a legacy manifest: streaming fingerprints, no scheme/root
-    data = np.load(os.path.join(step, "arrays.npz"))
-    man.pop("scheme"); man.pop("root")
-    for path, meta in man["leaves"].items():
-        meta["fingerprint"] = f"{fingerprint_bytes(data[meta['key']].tobytes()):016x}"
-    with open(os.path.join(step, "manifest.json"), "w") as f:
-        json.dump(man, f)
+    tree_man = json.load(
+        open(os.path.join(str(tmp_path), "step_1", "manifest.json")))
+    ck.save(2, st)
+    step2 = os.path.join(str(tmp_path), "step_2")
+    _legacy_rewrite(step2)
     ck._verify_cache.clear()
-    assert ck.verify(1)
-    out = ck.restore(1, jax.tree.map(lambda x: jnp.zeros_like(x), st))
+    with pytest.raises(UnsupportedManifestScheme, match="tree-v1"):
+        ck.verify(2)
+    with pytest.raises(UnsupportedManifestScheme, match="migrate"):
+        ck.restore(2, jax.tree.map(lambda x: jnp.zeros_like(x), st))
+    # resume survives legacy debris: the newest VERIFIABLE step wins
+    assert ck.latest_valid() == 1
+    # offline migration: legacy-verify -> tree-v1 rewrite, then everything
+    # works again and the manifest equals a native tree-v1 save's
+    assert ck.migrate(2)
+    assert not ck.migrate(2)  # idempotent: already tree-v1
+    assert ck.verify(2) and ck.latest_valid() == 2
+    out = ck.restore(2, jax.tree.map(lambda x: jnp.zeros_like(x), st))
     np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
                                   np.asarray(st["params"]["w"]))
-    # corruption detection parity: flip one byte, legacy path must catch it
+    man = json.load(open(os.path.join(step2, "manifest.json")))
+    assert man["scheme"] == "tree-v1"
+    assert man["root"] == tree_man["root"]
+    assert ({p: m["fingerprint"] for p, m in man["leaves"].items()}
+            == {p: m["fingerprint"] for p, m in tree_man["leaves"].items()})
+
+
+def test_migration_refuses_corrupt_legacy_checkpoint(tmp_path):
+    """Migration must not launder corruption into a fresh tree-v1 manifest:
+    a byte flip under a legacy manifest fails the LEGACY fingerprint check
+    and the manifest is left untouched."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state())
+    step = os.path.join(str(tmp_path), "step_1")
+    _legacy_rewrite(step)
+    # corrupt one array IN PLACE (clean zip, wrong bytes): the legacy
+    # fingerprint check must catch it, not a zipfile CRC error
     npz = os.path.join(step, "arrays.npz")
-    raw = bytearray(open(npz, "rb").read())
-    raw[len(raw) // 2] ^= 0xFF
-    open(npz, "wb").write(bytes(raw))
-    ck._verify_cache.clear()
-    assert not ck.verify(1)
+    data = dict(np.load(npz))
+    data["a0"] = data["a0"].copy()
+    data["a0"].reshape(-1)[0] += 1
+    np.savez(npz, **data)
+    with pytest.raises(CorruptCheckpointError, match="stream-v0"):
+        ck.migrate(1)
+    assert "scheme" not in json.load(
+        open(os.path.join(step, "manifest.json")))
 
 
-def test_tree_and_legacy_detect_same_corruption():
-    """A/B bit-identity guard (one release): both schemes' fingerprints of
-    the same buffer react to the same single-byte flip, and the tree scheme
-    equals hash.tree's fingerprint_bytes exactly."""
+def test_leaf_fingerprint_rejects_retired_scheme():
+    """tree-v1 equals hash.tree's fingerprint_bytes exactly; any other
+    scheme string is a typed error, not a silent fallback."""
+    from repro.checkpoint import UnsupportedManifestScheme
     from repro.checkpoint.checkpointer import _leaf_fingerprint
-    from repro.hash import fingerprint_bytes
     from repro.hash.tree import default_tree_hasher
 
     arr = np.arange(1024, dtype=np.float32)
-    bad = arr.copy().view(np.uint8)
-    bad[100] ^= 0xFF
-    bad = bad.view(np.float32)
-    for scheme in ("tree-v1", "stream-v0"):
-        assert _leaf_fingerprint(arr, scheme) != _leaf_fingerprint(bad, scheme)
     assert _leaf_fingerprint(arr, "tree-v1") == \
         default_tree_hasher().fingerprint_bytes(arr.tobytes())
-    assert _leaf_fingerprint(arr, "stream-v0") == \
-        fingerprint_bytes(arr.tobytes())
+    for scheme in ("stream-v0", "banana-v9"):
+        with pytest.raises(UnsupportedManifestScheme):
+            _leaf_fingerprint(arr, scheme)

@@ -159,29 +159,39 @@ def test_sharded_bloom_matches_single_device_decisions():
 
 def test_sharded_bloom_probes_in_graph_zero_syncs_one_psum():
     """Acceptance criterion: `add` lowers to a graph with NO host primitives
-    and ZERO psums; `contains`/fused admission carry exactly ONE psum. The
-    probe all_gather replaces the old host round-trip -- a device-to-device
-    collective, not a sync."""
+    and ZERO psums; `contains`/fused admission carry exactly ONE psum -- on
+    BOTH in-graph transports. The probe collective (all_gather, or the
+    routed all_to_all) replaces the old host round-trip -- device-to-device,
+    not a sync. Routed surfaces carry exactly one all_to_all and NO
+    all_gather (the bytes claim of DESIGN.md §7)."""
     dsb = DeviceShardedBloom(n_items=128, fp_rate=1e-2)
     toks, lens, valid, _ = dsb._stage(_ragged(9, 12))
     args = (dsb.bits, dsb.sharded.hasher, toks, lens, valid)
     j_add = str(jax.make_jaxpr(dsb._add_dev)(*args))
     j_con = str(jax.make_jaxpr(dsb._contains_dev)(*args))
     j_adm = str(jax.make_jaxpr(dsb._admit_dev)(*args))
-    for jaxpr in (j_add, j_con, j_adm):
+    j_add_rt = str(jax.make_jaxpr(dsb._add_rt)(*args))
+    j_con_rt = str(jax.make_jaxpr(dsb._contains_rt)(*args))
+    j_adm_rt = str(jax.make_jaxpr(dsb._admit_rt)(*args))
+    for jaxpr in (j_add, j_con, j_adm, j_add_rt, j_con_rt, j_adm_rt):
         for bad in ("callback", "host_callback", "device_get", "infeed"):
             assert bad not in jaxpr, f"host primitive {bad!r} in jaxpr"
-    assert j_add.count("psum") == 0
-    assert j_con.count("psum") == 1
-    assert j_adm.count("psum") == 1
+    assert j_add.count("psum") == 0 and j_add_rt.count("psum") == 0
+    assert j_con.count("psum") == 1 and j_con_rt.count("psum") == 1
+    assert j_adm.count("psum") == 1 and j_adm_rt.count("psum") == 1
+    for jaxpr in (j_add_rt, j_con_rt, j_adm_rt):
+        assert jaxpr.count("all_to_all") == 1
+        assert "all_gather" not in jaxpr
 
 
 def test_sharded_bloom_in_graph_matches_host_mod_path():
     """A/B: the in-graph Barrett reduction and the legacy host `h % m`
     round-trip produce identical bits and identical decisions."""
     items, other = _ragged(200, 16), _ragged(200, 16)
-    dev = DeviceShardedBloom(n_items=200, fp_rate=1e-3)
-    host = DeviceShardedBloom(n_items=200, fp_rate=1e-3, in_graph_mod=False)
+    dev = DeviceShardedBloom(n_items=200, fp_rate=1e-3,
+                             probe_transport="all_gather")
+    host = DeviceShardedBloom(n_items=200, fp_rate=1e-3,
+                              probe_transport="host")
     assert dev.plan.m == dev.m and not dev.plan.is_pow2
     dev.add_batch(items)
     host.add_batch(items)
@@ -293,14 +303,23 @@ def test_multi_device_bit_identity_and_bloom():
                                       bf.contains_batch(other))
         loads = np.bincount(dsb.owner_shards(items), minlength=8)
         assert (loads > 0).all(), loads  # Lemire routing spreads the load
-        # in-graph mod == legacy host h%m round-trip on a REAL 8-way mesh
+        # every transport == legacy host h%m round-trip on a REAL 8-way
+        # mesh: identical bits, identical fused-admission verdicts (dsb is
+        # the default "routed" transport)
         hostmod = DeviceShardedBloom(n_items=300, fp_rate=1e-3,
-                                     in_graph_mod=False)
-        hostmod.add_batch(items)
+                                     probe_transport="host")
+        gathered = DeviceShardedBloom(n_items=300, fp_rate=1e-3,
+                                      probe_transport="all_gather")
+        hostmod.add_batch(items); gathered.add_batch(items)
         np.testing.assert_array_equal(np.asarray(dsb.bits),
                                       np.asarray(hostmod.bits))
-        np.testing.assert_array_equal(dsb.check_and_add_batch(other),
-                                      hostmod.check_and_add_batch(other))
+        np.testing.assert_array_equal(np.asarray(dsb.bits),
+                                      np.asarray(gathered.bits))
+        adm = dsb.check_and_add_batch(other)
+        np.testing.assert_array_equal(adm, hostmod.check_and_add_batch(other))
+        np.testing.assert_array_equal(adm, gathered.check_and_add_batch(other))
+        np.testing.assert_array_equal(np.asarray(dsb.bits),
+                                      np.asarray(hostmod.bits))
         # Barrett digit reduction under shard_map: edge moduli incl. m=1,
         # pow2 and 2^32-1 stay bit-identical to numpy's uint64 %
         from jax.experimental.shard_map import shard_map
