@@ -42,7 +42,7 @@ import random
 import sys
 
 # modules with throughput rows that exist at both --fast and full sizes
-_SMOKE_MODULES = "kernels,multihash,hasher,tree,distributed"
+_SMOKE_MODULES = "kernels,multihash,hasher,tree,distributed,gf"
 
 # hot-path rows gated by --max-regress: the COMPUTE-BOUND jit engine fast
 # paths whose regression would invalidate the paper-claim trajectory, plus
@@ -56,7 +56,9 @@ _GATE_PREFIXES = ("multihash/kscale/",
                   "hasher_overhead/",
                   "tree/leaf_hash/",
                   "tree/digest/",
-                  "distributed/bloom_admit/B4096/routed/")
+                  "distributed/bloom_admit/B4096/routed/",
+                  "gf/engine/B64xN256/gf_multilinear/",
+                  "gf/engine/B64xN256/gf_multilinear_hm/")
 
 
 def perm_pvalue(base_logs: list, fresh_logs: list,

@@ -1,39 +1,70 @@
-"""Paper §5.4 analog: GF(2^32) carry-less Multilinear vs integer families.
+"""Paper §5.4 analog: GF(2^32) carry-less Multilinear vs integer families,
+measured on the PRODUCTION engine surface (`HashSpec`/`Hasher.hash_batch`,
+not the legacy single-key `core.gf` path -- the gf-parity CI guard bars the
+latter outside core/).
 
-TPU has no CLMUL (DESIGN.md §2): a carry-less 32x32 product costs 32
-mask-xor partial products on the VPU vs 5 native multiplies for the
+TPU has no CLMUL (DESIGN.md §2, §11): a carry-less 32x32 product costs 32
+mask-xor partial-product planes on the VPU vs 5 native multiplies for the
 integer path -- so the paper's conclusion ('hardware-supported carry-less
-multiplications are not fast enough') holds a fortiori. We measure the
-jnp shift-xor implementation and report the op-count model.
+multiplications are not fast enough') holds a fortiori. The `gf/engine/*`
+rows are under the blocking 1.3x regression gate (check_regression.py):
+they carry `samples_us` distributions for the permutation test.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gf, keys as keymod, multilinear as ml
+from repro.hash import Hasher, HashSpec
+
+from . import common
 from .common import ns_per_byte, row, timeit
 
-B, N = 64, 256  # smaller: clmul-by-loop is 32x the work
+B, N = 64, 256  # smaller than the integer benches: clmul is 32x the work
 N_BYTES = B * N * 4
 
 
-def run():
-    kb = keymod.KeyBuffer(seed=5)
-    hi, lo = map(jnp.asarray, kb.hi_lo(N + 1))
-    k32 = jnp.asarray(kb.hi_lo(N + 1)[1])
-    rng = np.random.Generator(np.random.Philox(key=np.uint64(4)))
-    toks = jnp.asarray(rng.integers(0, 2**32, size=(B, N), dtype=np.uint64).astype(np.uint32))
+def _hasher(family: str, k: int) -> Hasher:
+    return Hasher.from_spec(
+        HashSpec(family=family, n_hashes=k, out_bits=64,
+                 variable_length=False, seed=5),
+        max_len=N)
 
-    t_int = timeit(jax.jit(lambda t: ml.multilinear(t, hi, lo)), toks)
-    t_gf = timeit(jax.jit(lambda t: gf.gf_multilinear(t, k32)), toks)
-    t_gfhm = timeit(jax.jit(lambda t: gf.gf_multilinear_hm(t, k32)), toks)
-    row("gf/multilinear-int", t_int * 1e6, f"{ns_per_byte(t_int, N_BYTES):.3f} ns/B")
-    row("gf/gf-multilinear", t_gf * 1e6,
-        f"{ns_per_byte(t_gf, N_BYTES):.3f} ns/B; x{t_gf / t_int:.1f} slower (paper: 4-9x w/ CLMUL)")
-    row("gf/gf-multilinear-hm", t_gfhm * 1e6,
-        f"{ns_per_byte(t_gfhm, N_BYTES):.3f} ns/B; x{t_gfhm / t_int:.1f} slower")
+
+def run():
+    fast = common.FAST
+    repeats = 1 if fast else 7
+    rng = np.random.Generator(np.random.Philox(key=np.uint64(4)))
+    toks = rng.integers(0, 2**32, size=(B, N), dtype=np.uint64).astype(
+        np.uint32)
+
+    # integer reference point for the crossover row (same engine surface)
+    h_int = _hasher("multilinear", 1)
+    t_int = timeit(lambda: h_int.hash_batch(toks, backend="jnp"),
+                   repeats=repeats, inner=1, warmup=1)
+
+    # gated engine rows: K-scaling of the fused carry-less launch
+    t_gf1 = None
+    for family in ("gf_multilinear", "gf_multilinear_hm"):
+        for K in (1, 4):
+            if family == "gf_multilinear_hm" and K == 4:
+                continue  # HM scaling mirrors plain; keep the gate lean
+            h = _hasher(family, K)
+            t, samples = timeit(
+                lambda h=h: h.hash_batch(toks, backend="jnp"),
+                repeats=repeats, inner=1, warmup=1, return_samples=True)
+            if family == "gf_multilinear" and K == 1:
+                t_gf1 = t
+            row(f"gf/engine/B{B}xN{N}/{family}/K{K}", t * 1e6,
+                f"{ns_per_byte(t, N_BYTES):.3f} ns/B; fused jnp engine",
+                n_bytes=N_BYTES, samples_us=samples)
+
+    # crossover: the measured gf-vs-integer ratio at K=1 (paper: 4-9x with
+    # hardware CLMUL; the plane decomposition pays ~32 ops/char here)
+    row(f"gf/engine/B{B}xN{N}/crossover-vs-int", t_gf1 * 1e6,
+        f"x{t_gf1 / t_int:.1f} vs integer multilinear "
+        f"({t_int * 1e6:.1f} us; paper: 4-9x w/ CLMUL)",
+        n_bytes=N_BYTES)
+
     row("gf/tpu-model", 0.0,
-        "no CLMUL on TPU: 32 mask-xor steps/char vs 5 muls/char integer; "
-        "Barrett adds 2 clmuls once per string")
+        "no CLMUL on TPU: 32 mask-xor planes/char vs 5 muls/char integer; "
+        "Barrett adds 2 clmuls once per string (DESIGN.md §11)")

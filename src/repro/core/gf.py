@@ -132,3 +132,32 @@ def gf_multilinear_ref(tokens, keys32) -> int:
     for i, t in enumerate(tokens):
         acc ^= clmul_ref(int(keys32[i + 1]), int(t))
     return poly_mod_ref(acc)
+
+
+def gf_multilinear_hm_ref(tokens, keys32) -> int:
+    """Ground-truth GF Multilinear-HM over python ints (XOR pairing)."""
+    assert len(tokens) % 2 == 0
+    acc = int(keys32[0])
+    for i in range(len(tokens) // 2):
+        acc ^= clmul_ref(int(keys32[2 * i + 1]) ^ int(tokens[2 * i]),
+                         int(keys32[2 * i + 2]) ^ int(tokens[2 * i + 1]))
+    return poly_mod_ref(acc)
+
+
+def gf_h64_ref(tokens, keys32, hm: bool = False) -> int:
+    """Ground truth of the ENGINE's 64-bit GF surface (python ints):
+    ``h64 = (hash32 << 32) | acc_hi`` where hash32 is the Barrett-reduced
+    accumulator and acc_hi its hi limb. Bijective with the raw 63-bit
+    accumulator (the Barrett correction depends on the hi limb alone), so
+    64-bit consumers keep its full entropy; ``h64 >> 32`` is the paper's
+    finished 32-bit hash, matching the integer families' convention.
+    """
+    acc = int(keys32[0])
+    if hm:
+        for i in range(len(tokens) // 2):
+            acc ^= clmul_ref(int(keys32[2 * i + 1]) ^ int(tokens[2 * i]),
+                             int(keys32[2 * i + 2]) ^ int(tokens[2 * i + 1]))
+    else:
+        for i, t in enumerate(tokens):
+            acc ^= clmul_ref(int(keys32[i + 1]), int(t))
+    return (poly_mod_ref(acc) << 32) | (acc >> 32)

@@ -149,6 +149,70 @@ def multilinear_multi_np(tokens: np.ndarray, lens: np.ndarray,
         return (keys_u64[:, 0][:, None] + acc).T
 
 
+_GF_POLY_LOW = np.uint64(0xC5)  # core.gf.POLY_LOW
+
+
+def _clmul32_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Vectorized carry-less 32x32 -> 63-bit product in uint64 lanes.
+
+    Same shifted partial-product plane decomposition as the kernel
+    (`kernels.gf_multihash._clmul_tile`), on numpy uint64 (the product
+    fits 63 bits, so one limb suffices host-side). Inputs must hold
+    values < 2^32.
+    """
+    a = np.asarray(a, U64)
+    b = np.asarray(b, U64)
+    acc = np.zeros(np.broadcast_shapes(a.shape, b.shape), U64)
+    one = np.uint64(1)
+    with np.errstate(over="ignore"):  # 0 - 1 wrap IS the all-ones mask
+        for i in range(32):
+            mask = np.uint64(0) - ((b >> np.uint64(i)) & one)
+            acc ^= (a << np.uint64(i)) & mask
+    return acc
+
+
+def _gf_barrett_np(acc: np.ndarray) -> np.ndarray:
+    """uint64 63-bit accumulators -> uint32 Barrett residues mod p(x)
+    (the numpy twin of `core.gf.barrett_reduce`, on whole-u64 lanes)."""
+    q1 = acc >> _32
+    q2 = _clmul32_np(q1, _GF_POLY_LOW) ^ (q1 << _32)
+    q3 = q2 >> _32
+    f = _clmul32_np(q3, _GF_POLY_LOW) ^ (q3 << _32)
+    return ((acc ^ f) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def gf_multilinear_multi_np(tokens: np.ndarray, lens: np.ndarray,
+                            keys32: np.ndarray,
+                            family: str = "gf_multilinear") -> np.ndarray:
+    """K independent GF(2^32) hashes of each row in one vectorized pass.
+
+    The carry-less twin of `multilinear_multi_np`: tokens (B, N) uint32
+    (zero-padded); lens (B,) int32 length codes (`encode_lengths`, SAME
+    masking algebra via `_mask_multi`); keys32 (K, >= N+1) uint32 32-bit
+    keys (the LO plane of the u64 key streams) with m1 at column 0.
+    Returns (B, K) uint64 of the engine's 64-bit GF surface
+    ``h64 = (hash32 << 32) | acc_hi`` (see `core.gf.gf_h64_ref`); >>32
+    for the finished 32-bit hash.
+    """
+    s = np.asarray(tokens).astype(U64)
+    B, N = s.shape
+    tok_eff, live = _mask_multi(s, lens)
+    k = np.where(live[None, :, :], keys32[:, None, 1 : N + 1].astype(U64),
+                 U64(0))
+    if family == "gf_multilinear":
+        p = _clmul32_np(k, tok_eff[None, :, :])
+    elif family == "gf_multilinear_hm":
+        if N % 2:
+            raise ValueError("HM needs even padded N")
+        p = _clmul32_np(k[..., 0::2] ^ tok_eff[None, :, 0::2],
+                        k[..., 1::2] ^ tok_eff[None, :, 1::2])
+    else:
+        raise ValueError(family)
+    acc = np.bitwise_xor.reduce(p, axis=-1) ^ keys32[:, 0][:, None].astype(U64)
+    h32 = _gf_barrett_np(acc)
+    return ((h32.astype(U64) << _32) | (acc >> _32)).T
+
+
 def python_int_oracle(tokens, keys, hm: bool = False) -> int:
     """Arbitrary-precision ground truth (mod 2^64 made explicit)."""
     mod = 1 << 64

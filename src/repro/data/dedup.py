@@ -29,14 +29,17 @@ class BloomFilter:
     """
 
     def __init__(self, n_items: int, fp_rate: float = 1e-3, seed: int = 0xB100,
-                 backend: str | None = None):
+                 backend: str | None = None, family: str = "multilinear"):
         self.m = max(64, int(-n_items * math.log(fp_rate) / (math.log(2) ** 2)))
         self.k = max(1, int(self.m / n_items * math.log(2)))
         self.bits = np.zeros((self.m + 63) // 64, np.uint64)
         self.backend = backend
-        # k independent hash functions = one K-stream Hasher, kept for life
+        # k independent hash functions = one K-stream Hasher, kept for life.
+        # Any engine family works (probes are h % m on the family's 64-bit
+        # surface); `DeviceShardedBloom(family=...)` must match for the
+        # decision-identity A/B contract.
         self.hasher = Hasher.from_spec(HashSpec(
-            family="multilinear", n_hashes=self.k, out_bits=64,
+            family=family, n_hashes=self.k, out_bits=64,
             variable_length=True, seed=seed))
 
     def _hashes(self, items, backend=None) -> np.ndarray:

@@ -403,7 +403,8 @@ class DeviceShardedBloom:
     def __init__(self, n_items: int, fp_rate: float = 1e-3, seed: int = 0xB100,
                  mesh: Mesh | None = None, axis: str = "data",
                  in_graph_mod=_UNSET,
-                 probe_transport: "ProbeTransport | str" = "routed"):
+                 probe_transport: "ProbeTransport | str" = "routed",
+                 family: str = "multilinear"):
         import math
 
         if in_graph_mod is not _UNSET:
@@ -422,8 +423,11 @@ class DeviceShardedBloom:
         if self.m >= 1 << 31:
             raise ValueError(f"m={self.m} bits exceeds the int32 probe-index "
                              "domain; shard the filter by keyspace first")
+        # any engine family works: probes are `h % m` on the family's
+        # 64-bit hash_batch surface on every path (host round-trip and the
+        # fused in-graph mod_m epilogue agree per family by construction)
         self.sharded = ShardedHasher(Hasher.from_spec(HashSpec(
-            family="multilinear", n_hashes=self.k, out_bits=64,
+            family=family, n_hashes=self.k, out_bits=64,
             variable_length=True, seed=seed)), mesh, axis)
         self.mesh, self.axis = self.sharded.mesh, self.sharded.axis
         self.plan = limbs.ModPlan.for_modulus(self.m)

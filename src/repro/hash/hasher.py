@@ -165,8 +165,10 @@ class Hasher:
 
     def __call__(self, tokens, lengths=None):
         """Hash (..., N) uint32/int32 tokens -> (..., K) uint32 hashes
-        (out_bits=32) or (..., K, 2) uint32 (hi, lo) accumulator limbs
-        (out_bits=64; hi == the 32-bit hash, jnp has no native uint64).
+        (out_bits=32) or (..., K, 2) uint32 (hi, lo) limbs of the family's
+        64-bit surface (out_bits=64; hi == the 32-bit hash, jnp has no
+        native uint64 -- integer families: the mod-2^64 accumulator; GF
+        families: (hash32, acc_hi), DESIGN.md §11).
 
         Pure JAX: no host syncs, no numpy -- safe under jit/vmap/shard_map.
         `lengths` (optional, variable_length specs only) gives per-row token
@@ -204,16 +206,35 @@ class Hasher:
         out = self._accumulate(toks2, code, W, mod_m)  # (B, K, 2)
         return out.reshape(*batch_shape, spec.n_hashes, 2)
 
+    @property
+    def _is_gf(self) -> bool:
+        from .spec import FAMILIES
+
+        return FAMILIES[self.spec.family].gf
+
     def _accumulate(self, toks2, code, W, mod_m=None):
-        """(B, W) x length codes -> (B, K, 2) finished epilogue slots."""
+        """(B, W) x length codes -> (B, K, 2) finished epilogue slots.
+
+        Dispatches to the family's engine: the integer fused kernel / jnp
+        oracle, or (gf traits) the carry-less twin -- SAME slot layout
+        (DESIGN.md §11), so every consumer above this point is
+        family-agnostic. GF keys are 32-bit: only the lo plane reaches
+        the carry-less path (the hi plane is DCE'd under jit).
+        """
+        from ..kernels import gf_multihash as gfmh
         from ..kernels import multihash as mhk
         from ..kernels import ref
 
+        gf = self._is_gf
         kh = self.key_hi[:, 1 : W + 1]
         kl = self.key_lo[:, 1 : W + 1]
         m1 = jnp.stack([self.key_hi[:, 0], self.key_lo[:, 0]], axis=1)
         plan = self.plan
         if plan.backend == "jnp":
+            if gf:
+                return ref.gf_multihash_ref(toks2, kl, code, m1,
+                                            family=self.spec.family,
+                                            mod_m=mod_m)
             return ref.multihash_ref(toks2, kh, kl, code, m1,
                                      family=self.spec.family, mod_m=mod_m)
         B, _ = toks2.shape
@@ -224,12 +245,18 @@ class Hasher:
         toks_p = jnp.pad(toks2, ((0, Bp - B), (0, Wp - W)))
         # padding rows carry a dead fixed code (lm=0: every lane masked)
         code_p = jnp.pad(code, (0, Bp - B), constant_values=-1)
-        kh_p = jnp.pad(kh, ((0, 0), (0, Wp - W)))
         kl_p = jnp.pad(kl, ((0, 0), (0, Wp - W)))
-        out = mhk.multihash_blocks(
-            toks_p, kh_p, kl_p, code_p, m1, family=self.spec.family,
-            block_b=bb, block_n=bn, interpret=(plan.backend == "interpret"),
-            mod_m=mod_m)
+        if gf:
+            out = gfmh.gf_multihash_blocks(
+                toks_p, kl_p, code_p, m1, family=self.spec.family,
+                block_b=bb, block_n=bn,
+                interpret=(plan.backend == "interpret"), mod_m=mod_m)
+        else:
+            kh_p = jnp.pad(kh, ((0, 0), (0, Wp - W)))
+            out = mhk.multihash_blocks(
+                toks_p, kh_p, kl_p, code_p, m1, family=self.spec.family,
+                block_b=bb, block_n=bn,
+                interpret=(plan.backend == "interpret"), mod_m=mod_m)
         return out[:B]
 
     def bit_planes(self, tokens, lengths=None):
@@ -260,8 +287,9 @@ class Hasher:
 
     def probe_indices(self, tokens, plan, lengths=None):
         """(..., N) tokens -> (..., K) uint32 Bloom probe indices in [0, m):
-        the full 64-bit accumulators mod `plan.m` -- the exact single-device
-        `BloomFilter` formula (`h % m` on the uint64 accumulator). The
+        the family's full 64-bit surface mod `plan.m` -- the exact single-
+        device `BloomFilter` formula (`h % m` on the uint64 hash_batch
+        output, for every engine family). The
         Barrett digit reduction (`limbs.mod_u64`) runs FUSED in the
         backend's epilogue (the kernel `mod_m=` path: the accumulator never
         leaves registers before reducing), so this is pure JAX
@@ -339,8 +367,15 @@ class Hasher:
             n_h = ktune.pow2_at_least(n_req)
             toks_h = np.zeros((B, n_h), np.uint32)
             toks_h[:, :N] = toks
-            acc = hostref.multilinear_multi_np(
-                toks_h, lens, mkb.stacked_u64(n_h + 1), family=spec.family)
+            if self._is_gf:
+                # carry-less twin: 32-bit keys = lo plane of the streams;
+                # returns the engine's h64 = (hash32 << 32) | acc_hi surface
+                acc = hostref.gf_multilinear_multi_np(
+                    toks_h, lens, mkb.planes(n_h + 1)[1], family=spec.family)
+            else:
+                acc = hostref.multilinear_multi_np(
+                    toks_h, lens, mkb.stacked_u64(n_h + 1),
+                    family=spec.family)
             if out_bits == 64:
                 return acc
             return (acc >> np.uint64(32)).astype(np.uint32)

@@ -23,16 +23,27 @@ DEFAULT_SEED = 0x1E53
 class FamilyTraits:
     """Static traits of a shipped hash family, keyed by name in `FAMILIES`.
 
-    engine:   runs on the fused kernel engine (kernels/multihash.py), i.e.
-              constructible as a `HashSpec`/`Hasher`; GF(2) families live in
-              core/gf.py + kernels/gf_multilinear.py and are registered here
-              so correctness tooling (repro.quality) sweeps them too.
-    gf:       carry-less GF(2^32) arithmetic (no 64-bit accumulator).
+    engine:   runs on the fused kernel engine (kernels/multihash.py for the
+              integer families, kernels/gf_multihash.py for the carry-less
+              ones), i.e. constructible as a `HashSpec`/`Hasher`.
+    gf:       carry-less GF(2^32) arithmetic: xor accumulation + Barrett
+              polynomial reduction; the engine's 64-bit surface is
+              ``h64 = (hash32 << 32) | acc_hi`` (DESIGN.md §11).
     pairwise: HM-style two-characters-per-multiplication pairing (requires
               even padded length).
-    acc64:    exposes the full mod-2^64 accumulator, i.e. the Barrett
-              `mod_m` probe epilogue (DESIGN.md §2) applies.
-    key_bits: random key width per key word (64 integer / 32 carry-less).
+    acc64:    exposes a full 64-bit accumulator surface to which the
+              Barrett `mod_m` probe epilogue (DESIGN.md §2) applies --
+              the mod-2^64 accumulator for the integer families, the
+              bijective (hash32, acc_hi) packing for the GF ones.
+    key_bits: random key width per key word (64 integer / 32 carry-less;
+              GF consumes the LO plane of the u64 key streams).
+    probe_uniform: fixed-key probe-index uniformity holds per MEMBER (not
+              just over the key draw), so the quality battery's
+              `probe_path_report` sweeps the family's fused mod-m path.
+              True for the non-pairwise families (an odd positional key /
+              a full-rank clmul map makes the accumulator uniform over
+              random inputs); HM members are only guaranteed over the key
+              draw (DESIGN.md §9).
     """
 
     engine: bool
@@ -40,19 +51,20 @@ class FamilyTraits:
     pairwise: bool = False
     acc64: bool = True
     key_bits: int = 64
+    probe_uniform: bool = False
 
 
 #: Every shipped family, engine-backed or not. This is the enumeration the
 #: quality battery (repro.quality.runner) sweeps: adding a family here puts
 #: it under the statistical gate.
 FAMILIES: "dict[str, FamilyTraits]" = {
-    "multilinear": FamilyTraits(engine=True),
+    "multilinear": FamilyTraits(engine=True, probe_uniform=True),
     "multilinear_2x2": FamilyTraits(engine=True, pairwise=True),
     "multilinear_hm": FamilyTraits(engine=True, pairwise=True),
-    "gf_multilinear": FamilyTraits(engine=False, gf=True, acc64=False,
-                                   key_bits=32),
-    "gf_multilinear_hm": FamilyTraits(engine=False, gf=True, pairwise=True,
-                                      acc64=False, key_bits=32),
+    "gf_multilinear": FamilyTraits(engine=True, gf=True, key_bits=32,
+                                   probe_uniform=True),
+    "gf_multilinear_hm": FamilyTraits(engine=True, gf=True, pairwise=True,
+                                      key_bits=32),
     # hash.tree's composed construction (MULTILINEAR leaves + pairwise
     # strongly-universal fold). Not a HashSpec family (the TreeHasher wraps
     # one); registered so the quality battery measures the composition, not
@@ -60,8 +72,10 @@ FAMILIES: "dict[str, FamilyTraits]" = {
     "tree_multilinear": FamilyTraits(engine=False),
 }
 
-#: Families implemented by the engine (kernels/multihash.py + hostref.py) --
-#: the valid `HashSpec.family` values, unchanged from before the registry.
+#: Families implemented by the engine (kernels/multihash.py or
+#: kernels/gf_multihash.py, + their hostref.py twins) -- the valid
+#: `HashSpec.family` values. The carry-less families joined with the GF
+#: engine promotion (DESIGN.md §11).
 FAMILY_NAMES = tuple(n for n, t in FAMILIES.items() if t.engine)
 
 
@@ -77,8 +91,10 @@ class HashSpec:
     family:          one of FAMILY_NAMES (paper §2-§3).
     n_hashes:        K independent functions evaluated per call (k-probe
                      Bloom, fingerprint/split/shard triples, ...).
-    out_bits:        32 -> the paper's finished ``>> 32`` hash (uint32);
-                     64 -> the full mod-2^64 accumulator (fingerprints).
+    out_bits:        32 -> the paper's finished 32-bit hash (uint32);
+                     64 -> the family's full 64-bit surface (fingerprints):
+                     the mod-2^64 accumulator for the integer families,
+                     ``(hash32 << 32) | acc_hi`` for the GF ones (§11).
     variable_length: apply the paper's append-1 rule (prefix-safe hashing
                      of variable-length strings) vs raw fixed-length.
     seed:            int -> stream j uses `derive_stream_seed(seed, j)`;

@@ -15,6 +15,7 @@ import numpy as np
 
 from ..core import gf as gf_core
 from ..core import limbs
+from . import gf_multihash as gfmh
 from . import gf_multilinear as gfk
 from . import multihash as mhk
 from . import multilinear as mlk
@@ -38,6 +39,18 @@ def launch_count() -> int:
 )
 def _multihash_jit(tokens, key_hi, key_lo, lens, m1, *, family, block_b,
                    block_n, backend, mod_m):
+    if family.startswith("gf_"):
+        # carry-less engine: 32-bit keys -- the hi plane is dead weight
+        # here (DCE'd under jit), kept in the signature so every caller
+        # stages key planes identically across families
+        if backend == "jnp":
+            return ref.gf_multihash_ref(tokens, key_lo, lens, m1,
+                                        family=family, mod_m=mod_m)
+        return gfmh.gf_multihash_blocks(
+            tokens, key_lo, lens, m1,
+            family=family, block_b=block_b, block_n=block_n,
+            interpret=(backend == "interpret"), mod_m=mod_m,
+        )
     if backend == "jnp":
         return ref.multihash_ref(tokens, key_hi, key_lo, lens, m1,
                                  family=family, mod_m=mod_m)

@@ -70,6 +70,45 @@ def multihash_ref(tokens, key_hi, key_lo, lens, m1, family="multilinear",
     return jnp.stack(outs, axis=1)
 
 
+def gf_multihash_ref(tokens, key_lo, lens, m1, family="gf_multilinear",
+                     mod_m=None):
+    """Pure-jnp oracle of the fused GF multi-hash kernel: (B, N) -> (B, K, 2).
+
+    Same semantics as `gf_multihash.gf_multihash_blocks` (length-code
+    masking, m1 xor, Barrett, hash32 in slot 0 / accumulator hi limb in
+    slot 1; with mod_m the slot-0 probe reduction and slot-1 hash32) with
+    the K loop unrolled over the shared partial-product-plane clmul.
+    """
+    from .gf_multihash import _clmul_tile, _xor_reduce_tile
+    from .multihash import _mask_tile
+
+    toks = jnp.asarray(tokens).astype(jnp.uint32)
+    B, N = toks.shape
+    K = key_lo.shape[0]
+    tok_eff, live = _mask_tile(toks, jnp.asarray(lens), jnp.int32(0))
+    outs = []
+    for k in range(K):
+        kl = jnp.where(live, key_lo[k][None, :], np.uint32(0))
+        if family == "gf_multilinear":
+            p_hi, p_lo = _clmul_tile(kl, tok_eff)
+        elif family == "gf_multilinear_hm":
+            p_hi, p_lo = _clmul_tile(kl[:, 0::2] ^ tok_eff[:, 0::2],
+                                     kl[:, 1::2] ^ tok_eff[:, 1::2])
+        else:
+            raise ValueError(family)
+        acc_hi = _xor_reduce_tile(p_hi)
+        acc_lo = _xor_reduce_tile(p_lo) ^ jnp.broadcast_to(m1[k, 1],
+                                                           (B,)).astype(
+            jnp.uint32)
+        h32 = gf_core.barrett_reduce(acc_hi, acc_lo)
+        if mod_m is not None:
+            outs.append(jnp.stack([limbs.mod_u64((h32, acc_hi), mod_m), h32],
+                                  axis=-1))
+        else:
+            outs.append(jnp.stack([h32, acc_hi], axis=-1))
+    return jnp.stack(outs, axis=1)
+
+
 def gf_accumulate_ref(tokens, keys32, family="gf_multilinear"):
     """(B, N) x (N,) keys -> (B, 2) uint32 xor-accumulators (hi, lo)."""
     toks = jnp.asarray(tokens).astype(jnp.uint32)

@@ -8,10 +8,14 @@ The battery's contract (`metrics.avalanche_bic` etc.) is a function
 
 where row b is hashed by its OWN key words (one fresh family member per
 sample -- strong universality is a claim over the key draw), `hi` is the
-finished 32-bit hash, and `(hi, lo)` is the full mod-2^64 accumulator for
-`acc64` families (the Barrett `mod_m` probe path applies to it). GF
-families consume the lo plane only (32-bit carry-less keys) and return a
-zero lo limb.
+finished 32-bit hash, and `(hi, lo)` is the family's full 64-bit surface
+for `acc64` families (the Barrett `mod_m` probe path applies to it): the
+mod-2^64 accumulator for the integer families, and the engine's
+``h64 = (hash32 << 32) | acc_hi`` packing for the GF ones (bijective with
+the raw 63-bit xor-accumulator, DESIGN.md §11) -- so the battery's mod-m
+metrics measure exactly the probe surface `Hasher.hash_batch`/
+`probe_indices` ship. GF families consume the lo plane only (32-bit
+carry-less keys).
 
 The adapters re-state each family's defining formula over the SAME
 `core.limbs` / `core.gf` arithmetic the engine uses; tests pin them
@@ -87,25 +91,25 @@ def _xor_reduce_rows(x):
 
 def gf_multilinear(toks, khi, klo):
     """GF(2^32) MULTILINEAR: xor-accumulated carry-less products, Barrett-
-    reduced mod p(x) (core.gf). 32-bit keys ride in the lo plane."""
+    reduced mod p(x) (core.gf). 32-bit keys ride in the lo plane; returns
+    the engine's (hash32, acc_hi) 64-bit surface (DESIGN.md §11)."""
     del khi
     p_hi, p_lo = gf_core.clmul32(klo[:, 1:], toks)
     hi = _xor_reduce_rows(p_hi)
     lo = _xor_reduce_rows(p_lo) ^ klo[:, 0]
-    h = gf_core.barrett_reduce(hi, lo)
-    return h, jnp.zeros_like(h)
+    return gf_core.barrett_reduce(hi, lo), hi
 
 
 def gf_multilinear_hm(toks, khi, klo):
-    """GF(2^32) MULTILINEAR-HM: (m_{2i} ^ s)(m_{2i+1} ^ s') pairing."""
+    """GF(2^32) MULTILINEAR-HM: (m_{2i} ^ s)(m_{2i+1} ^ s') pairing;
+    returns the engine's (hash32, acc_hi) surface like `gf_multilinear`."""
     del khi
     a = klo[:, 1::2] ^ toks[:, 0::2]
     b = klo[:, 2::2] ^ toks[:, 1::2]
     p_hi, p_lo = gf_core.clmul32(a, b)
     hi = _xor_reduce_rows(p_hi)
     lo = _xor_reduce_rows(p_lo) ^ klo[:, 0]
-    h = gf_core.barrett_reduce(hi, lo)
-    return h, jnp.zeros_like(h)
+    return gf_core.barrett_reduce(hi, lo), hi
 
 
 def tree_multilinear(toks, khi, klo):

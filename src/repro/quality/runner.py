@@ -208,47 +208,67 @@ def run_family(fam, n_keys: int, avalanche_keys: int, seed: int):
     return results, all(m.passed for m in results)
 
 
+def probe_path_families() -> "list[str]":
+    """Registry-driven probe-path sweep set: every engine family whose
+    `probe_uniform` trait claims fixed-key probe uniformity. The registry
+    drives the sweep, so promoting a family there (e.g. the GF engine)
+    enrolls it here automatically -- no runner edit, no silent gap."""
+    from ..hash import spec as hash_spec
+
+    return [name for name in hash_spec.registered_families()
+            if hash_spec.FAMILIES[name].engine
+            and hash_spec.FAMILIES[name].probe_uniform]
+
+
 def probe_path_report(n_keys: int, seed: int) -> dict:
     """Quality coverage of the PRODUCTION probe surface: a fixed-key
     `Hasher.probe_indices` sweep (the fused Barrett mod-m epilogue,
     DESIGN.md §2) and its `ShardedHasher` twin, at adversarial non-pow2
-    moduli.
+    moduli, for every `probe_uniform` engine family (registry-driven:
+    `probe_path_families`).
 
     Fixed-key uniformity is a stronger, per-member property than strong
-    universality; it holds for MULTILINEAR (an odd positional key makes the
-    accumulator exactly uniform over random inputs) -- the Bloom default --
-    which is the family swept here. HM members are only guaranteed over the
-    key draw (the battery's job): a fixed HM member has provably biased
-    low accumulator bits (products of uniforms), see DESIGN.md §9.
+    universality; the trait marks the families where it holds: MULTILINEAR
+    (an odd positional key makes the accumulator exactly uniform over
+    random inputs; multilinear_2x2 is value-identical, so its coverage
+    rides along) and GF MULTILINEAR (the carry-less products span the
+    accumulator for any nonzero key word; h64 = (hash32 << 32) | acc_hi is
+    a bijection of the raw accumulator, DESIGN.md §11). HM members are
+    only guaranteed over the key draw (the battery's job): a fixed HM
+    member has provably biased low accumulator bits, see DESIGN.md §9.
     """
     nb = _n_buckets(n_keys)
-    hasher = Hasher.from_spec(
-        HashSpec(family="multilinear", n_hashes=2, out_bits=64,
-                 variable_length=False, seed=seed),
-        max_len=N_TOKENS)
     toks = keygen.token_batch(keygen.battery_key(seed, 7), n_keys, N_TOKENS)
-    sharded = hasher.sharded()
-    out = {"family": "multilinear", "n_hashes": 2, "metrics": [],
-           "sharded_identical": True}
-    for m in (*MODULI_SMALL, MODULUS_HUGE):
-        plan = limbs.ModPlan.for_modulus(m)
-        idx = jax.jit(lambda t, p=plan: hasher.probe_indices(t, p))(toks)
-        idx_sh = sharded.probe_indices(toks, plan)
-        if not bool(jnp.array_equal(idx, idx_sh)):
-            out["sharded_identical"] = False
-        for k in range(idx.shape[-1]):
-            if m <= metrics.MAX_EXACT_MOD:
-                counts = np.asarray(jnp.zeros((m,), jnp.int32).at[
-                    idx[:, k].astype(jnp.int32)].add(1))
-                expected = n_keys / m
-            else:
-                counts = np.asarray(metrics.bucket_counts(idx[:, k], nb))
-                expected = metrics.mod_bucket_expected(m, nb, n_keys)
-            out["metrics"].append(
-                _chi2_metric(f"probe_mod_{m}/k{k}", counts,
-                             expected).to_dict())
-    out["passed"] = (out["sharded_identical"]
-                     and all(m["passed"] for m in out["metrics"]))
+    out = {"families": {}}
+    for family in probe_path_families():
+        hasher = Hasher.from_spec(
+            HashSpec(family=family, n_hashes=2, out_bits=64,
+                     variable_length=False, seed=seed),
+            max_len=N_TOKENS)
+        sharded = hasher.sharded()
+        frep = {"n_hashes": 2, "metrics": [], "sharded_identical": True}
+        for m in (*MODULI_SMALL, MODULUS_HUGE):
+            plan = limbs.ModPlan.for_modulus(m)
+            idx = jax.jit(lambda t, p=plan, h=hasher:
+                          h.probe_indices(t, p))(toks)
+            idx_sh = sharded.probe_indices(toks, plan)
+            if not bool(jnp.array_equal(idx, idx_sh)):
+                frep["sharded_identical"] = False
+            for k in range(idx.shape[-1]):
+                if m <= metrics.MAX_EXACT_MOD:
+                    counts = np.asarray(jnp.zeros((m,), jnp.int32).at[
+                        idx[:, k].astype(jnp.int32)].add(1))
+                    expected = n_keys / m
+                else:
+                    counts = np.asarray(metrics.bucket_counts(idx[:, k], nb))
+                    expected = metrics.mod_bucket_expected(m, nb, n_keys)
+                frep["metrics"].append(
+                    _chi2_metric(f"probe_mod_{m}/k{k}", counts,
+                                 expected).to_dict())
+        frep["passed"] = (frep["sharded_identical"]
+                          and all(m["passed"] for m in frep["metrics"]))
+        out["families"][family] = frep
+    out["passed"] = all(f["passed"] for f in out["families"].values())
     return out
 
 
@@ -293,10 +313,11 @@ def _iter_verdicts(report, per_metric_bads: bool = True):
             continue
         for m in f["metrics"]:
             yield f"{name}/{m['name']}", bool(m["passed"])
-    for m in report["probe_path"]["metrics"]:
-        yield f"probe_path/{m['name']}", bool(m["passed"])
-    yield "probe_path/sharded_identical", bool(
-        report["probe_path"]["sharded_identical"])
+    for fname, f in sorted(report["probe_path"]["families"].items()):
+        for m in f["metrics"]:
+            yield f"probe_path/{fname}/{m['name']}", bool(m["passed"])
+        yield f"probe_path/{fname}/sharded_identical", bool(
+            f["sharded_identical"])
 
 
 def _iter_values(report):

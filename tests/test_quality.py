@@ -165,11 +165,11 @@ def test_multilinear_hm_adapter_matches_hostref():
                                   hostref.multilinear_hm_np(toks, keys))
 
 
-@pytest.mark.parametrize("name,engine_fn", [
-    ("gf_multilinear", gf_core.gf_multilinear),
-    ("gf_multilinear_hm", gf_core.gf_multilinear_hm),
+@pytest.mark.parametrize("name,engine_fn,hm", [
+    ("gf_multilinear", gf_core.gf_multilinear, False),
+    ("gf_multilinear_hm", gf_core.gf_multilinear_hm, True),
 ])
-def test_gf_adapters_match_engine(name, engine_fn):
+def test_gf_adapters_match_engine(name, engine_fn, hm):
     b, n = 64, 6
     toks = RNG.integers(0, 2**32, (b, n), dtype=np.uint64).astype(np.uint32)
     keys32 = RNG.integers(0, 2**32, n + 1, dtype=np.uint64).astype(np.uint32)
@@ -178,7 +178,10 @@ def test_gf_adapters_match_engine(name, engine_fn):
     hi, lo = getattr(qfam, name)(jnp.asarray(toks), khi, klo)
     want = np.asarray(engine_fn(jnp.asarray(toks), jnp.asarray(keys32)))
     np.testing.assert_array_equal(np.asarray(hi), want)
-    assert not np.asarray(lo).any()
+    # (hi, lo) is the engine's full h64 = (hash32 << 32) | acc_hi surface
+    h64 = (np.asarray(hi).astype(np.uint64) << 32) | np.asarray(lo)
+    want64 = [gf_core.gf_h64_ref(row, keys32, hm=hm) for row in toks]
+    np.testing.assert_array_equal(h64, np.asarray(want64, np.uint64))
 
 
 def test_tree_adapter_matches_numpy_reference():
@@ -299,8 +302,14 @@ def test_battery_flags_bads_passes_shipped(small_report):
 
 def test_probe_path_section(small_report):
     pp = small_report["probe_path"]
-    assert pp["passed"] and pp["sharded_identical"]
-    assert len(pp["metrics"]) == 2 * 3  # K=2 probes x 3 adversarial moduli
+    assert pp["passed"]
+    # registry-driven: every probe_uniform engine family is swept
+    assert set(pp["families"]) == {"multilinear", "gf_multilinear"}
+    assert set(pp["families"]) == set(runner.probe_path_families())
+    for name, f in pp["families"].items():
+        assert f["passed"] and f["sharded_identical"], name
+        # K=2 probes x 3 adversarial moduli
+        assert len(f["metrics"]) == 2 * 3, name
 
 
 def test_report_drift_detection(small_report):
